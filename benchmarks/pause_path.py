@@ -1,0 +1,111 @@
+"""§Perf HC3: hillclimbing the pause/unpause path itself (the paper's own
+metric, Table I). Iterations:
+
+  it.1  transfer-queue count (the QDMA queue analogue): 1/2/4/8/16 streams
+  it.2  qdma_pack int8 compression of the snapshot payload (lossy — bytes
+        vs error trade; intended for serving tenants / tolerant restarts)
+  it.3  incremental snapshots: identical (immutable) device arrays are not
+        re-transferred — a serving tenant's params never change between
+        pauses, only its KV cache does
+
+Measured on a realistic ~400MB state (qwen3-100m-class params + adam).
+"""
+import os
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import statistics
+import sys
+import time
+
+
+def bench(repeats: int = 3) -> list:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import register
+    from repro.core import StagingEngine
+    import repro.configs.base as B
+    from repro.train.step import init_train_state
+    from repro.configs import make_run_config
+
+    def qwen3_100m():
+        return B.ModelConfig(
+            name="qwen3-100m-bench", family="dense",
+            num_layers=12, d_model=640, num_heads=10, num_kv_heads=2,
+            d_ff=1920, vocab_size=32000, head_dim=64, qk_norm=True,
+            tie_embeddings=True)
+
+    register("qwen3-100m-bench", qwen3_100m, qwen3_100m)
+    run = make_run_config("qwen3-100m-bench", "train_4k")
+    state = init_train_state(run, jax.random.key(0))
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(state))
+    rows = []
+
+    def timeit(name, eng, tree, note=""):
+        ts = []
+        moved = None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            staged = eng.save(tree)
+            ts.append(time.perf_counter() - t0)
+            if moved is None:           # first save (memo cold)
+                moved = eng.last_stats.bytes_moved
+        t0 = time.perf_counter()
+        out = eng.restore(staged)
+        restore_s = time.perf_counter() - t0
+        err = 0.0
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            if np.issubdtype(np.asarray(b).dtype, np.floating):
+                d = np.abs(np.asarray(a, np.float32) -
+                           np.asarray(b, np.float32))
+                s = np.abs(np.asarray(a, np.float32)).max() + 1e-9
+                err = max(err, float(d.max() / s))
+        rows.append({"name": name, "save_ms": statistics.median(ts) * 1000,
+                     "restore_ms": restore_s * 1000,
+                     "bytes_moved": int(moved), "logical_bytes": int(nbytes),
+                     "max_rel_err": err, "note": note})
+
+    # it.1: queue sweep (uncompressed)
+    for q in (1, 2, 4, 8, 16):
+        timeit(f"queues_{q}", StagingEngine(num_queues=q), state)
+
+    # it.2: int8 compression (block=128 divides every trailing dim here)
+    timeit("int8", StagingEngine(num_queues=8, compression="int8",
+                                 block=128), state,
+           note="lossy: bounded by one quant step (see test_properties)")
+
+    # it.3: incremental — second save of an UNCHANGED tree moves ~0 bytes
+    eng = StagingEngine(num_queues=8, incremental=True)
+    eng.save(state)                              # warm the memo
+    timeit("incremental_unchanged", eng, state, note="params identical")
+    # and a half-changed tree (simulates serving: cache moves, params don't)
+    state2 = dict(state)
+    state2["opt"] = jax.tree.map(lambda x: x + 0 if False else x,
+                                 state["opt"])   # same objects
+    state2["params"] = jax.tree.map(lambda x: x * 1.0, state["params"])
+    timeit("incremental_half_changed", eng, state2,
+           note="params changed, opt identical")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    rows = bench(args.repeats)
+    for r in rows:
+        print(json.dumps(r))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""Table II reproduction: per-macro-step timings of one reconfiguration
+cycle (rescan / remove VF / change #VF / add VF), detach-attach vs
+pause-unpause, for 1/4/10 VFs — a single representative run, like the
+paper's ("these timings represent one particular run")."""
+import os
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=32")
+
+import argparse
+import json
+import sys
+
+STEPS = ("rescan", "remove_vf", "change_num_vf", "add_vf", "total")
+
+
+def bench(vf_counts=(1, 4, 10), warmup: int = 2) -> list:
+    import jax  # noqa: F401
+    from repro.configs import make_run_config
+    from repro.configs.paper import PAPER_MAX_VFS
+    from repro.core import DevicePool, SVFFManager, Tenant
+
+    run = make_run_config("svff-bench", "train_4k", smoke=True)
+    rows = []
+    for nvf in vf_counts:
+        import tempfile
+        wd = tempfile.mkdtemp(prefix="svff_t2_")
+        pool = DevicePool(max_vfs=PAPER_MAX_VFS)
+        mgr = SVFFManager(pool, workdir=wd)
+        tenants = [Tenant(f"vm{i}", run, local_batch=2, seq_len=16, seed=i)
+                   for i in range(nvf)]
+        per = max(1, 32 // max(nvf, 1) // 2)
+        mgr.init(num_vfs=nvf, tenants=tenants, devices_per_vf=per)
+        for _ in range(warmup):           # steady-state, like the paper
+            mgr.reconf(num_vfs=nvf, use_pause=True, devices_per_vf=per)
+            mgr.reconf(num_vfs=nvf, use_pause=False, devices_per_vf=per)
+        da = mgr.reconf(num_vfs=nvf, use_pause=False, devices_per_vf=per)
+        pu = mgr.reconf(num_vfs=nvf, use_pause=True, devices_per_vf=per)
+        row = {"num_vf": nvf}
+        for s in STEPS:
+            row[f"DA_{s}_ms"] = da[s] * 1000.0
+            row[f"PU_{s}_ms"] = pu[s] * 1000.0
+        rows.append(row)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vfs", type=int, nargs="*", default=[1, 4, 10])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    rows = bench(tuple(args.vfs))
+    for r in rows:
+        print(json.dumps(r))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

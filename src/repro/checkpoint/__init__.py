@@ -1,0 +1,1 @@
+"""Crash-consistent sharded checkpoint store."""

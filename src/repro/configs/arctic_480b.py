@@ -1,0 +1,28 @@
+"""Snowflake Arctic (base): dense-MoE hybrid, 128 experts top-2 with a dense
+FFN in residual parallel. [hf:Snowflake/snowflake-arctic-base; hf]"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b", family="moe",
+        num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+        d_ff=4864, vocab_size=32000, rope_theta=1e4,
+        moe=MoEConfig(num_experts=128, num_experts_per_token=2, d_ff=4864,
+                      dense_residual=True),
+        source="hf:Snowflake/snowflake-arctic-base; hf",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=8, num_kv_heads=2,
+        d_ff=96, vocab_size=512,
+        moe=MoEConfig(num_experts=4, num_experts_per_token=2, d_ff=96,
+                      dense_residual=True),
+    )
+
+
+# 480B-class: bf16 params + Adafactor to fit v5e HBM (see DESIGN.md).
+register("arctic-480b", full, smoke, optimizer="adafactor")

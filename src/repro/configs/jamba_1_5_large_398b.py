@@ -1,0 +1,39 @@
+"""Jamba-1.5-Large: hybrid Mamba+attention 1:7 interleave (period of 8:
+one attention layer per 7 mamba layers), MoE 16e top-2 on every other layer,
+dense MLP on the rest. 398B total / ~94B active. Sub-quadratic (9 attn layers
+only), so long_500k applies. [arXiv:2403.19887; hf]
+
+Hardware adaptation: mamba layers use the Mamba-2 (SSD) scalar-per-head-decay
+chunked formulation — MXU-friendly — rather than Mamba-1's per-(channel,state)
+scan (see DESIGN.md §2).
+"""
+from repro.configs.base import (ATTN, MAMBA, ModelConfig, MoEConfig,
+                                SSMConfig, register)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b", family="hybrid",
+        num_layers=72, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=24576, vocab_size=65536, rope_theta=1e4,
+        block_pattern=(ATTN,) + (MAMBA,) * 7,
+        moe=MoEConfig(num_experts=16, num_experts_per_token=2, d_ff=24576,
+                      every=2, offset=1),
+        ssm=SSMConfig(d_state=128, expand=2, head_dim=64, conv_dim=4),
+        source="arXiv:2403.19887; hf",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b-smoke", family="hybrid",
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=512,
+        block_pattern=(ATTN, MAMBA, MAMBA, MAMBA),
+        moe=MoEConfig(num_experts=4, num_experts_per_token=2, d_ff=128,
+                      every=2, offset=1),
+        ssm=SSMConfig(d_state=16, expand=2, head_dim=16, conv_dim=4, chunk=16),
+    )
+
+
+register("jamba-1.5-large-398b", full, smoke, optimizer="adafactor")

@@ -1,0 +1,24 @@
+"""SVFF core — the paper's contribution as a composable module.
+
+DevicePool (PF) -> VirtualFunction slices -> Tenants (VMs), with the novel
+pause/unpause mechanism, init/reconf automation, QMP-style control plane,
+and fault-tolerance built on the same snapshot machinery.
+"""
+from repro.core.fault import HeartbeatMonitor, Supervisor
+from repro.core.manager import SVFFManager
+from repro.core.pause import PauseError, pause_vf, unpause_vf
+from repro.core.pool import DevicePool, PoolError
+from repro.core.qmp import ControlPlane
+from repro.core.records import RecordStore
+from repro.core.snapshot import ConfigSpaceSnapshot
+from repro.core.staging import StagingEngine, TransferStats
+from repro.core.tenant import DevicePausedError, Tenant
+from repro.core.vf import VFState, VFTransitionError, VirtualFunction
+
+__all__ = [
+    "ConfigSpaceSnapshot", "ControlPlane", "DevicePausedError", "DevicePool",
+    "HeartbeatMonitor", "PauseError", "PoolError", "RecordStore",
+    "SVFFManager", "StagingEngine", "Supervisor", "Tenant", "TransferStats",
+    "VFState", "VFTransitionError", "VirtualFunction", "pause_vf",
+    "unpause_vf",
+]

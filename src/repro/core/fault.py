@@ -1,0 +1,99 @@
+"""Fault tolerance: heartbeats, straggler detection, automatic recovery.
+
+At 1000+ node scale, slow or dead workers are routine. The SVFF mechanism
+gives a clean recovery primitive: a straggling tenant is *paused* (its
+state leaves the sick devices) and *unpaused* onto healthy ones — the
+tenant's loop never observes a teardown, exactly like a guest surviving a
+reconfiguration. Checkpoint/restart (launch/train.py --resume) covers the
+host-loss case the pause path cannot.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.manager import SVFFManager
+from repro.core.tenant import Tenant
+
+
+@dataclass
+class Heartbeat:
+    last_beat: float = 0.0
+    step_times: list = field(default_factory=list)
+
+    def beat(self, step_time: float):
+        self.last_beat = time.time()
+        self.step_times.append(step_time)
+        if len(self.step_times) > 64:
+            self.step_times = self.step_times[-64:]
+
+
+class HeartbeatMonitor:
+    """Tracks per-tenant step latencies; flags stragglers and the dead."""
+
+    def __init__(self, straggler_factor: float = 3.0,
+                 dead_after_s: float = 30.0):
+        self.straggler_factor = straggler_factor
+        self.dead_after_s = dead_after_s
+        self.beats: dict[str, Heartbeat] = {}
+
+    def record(self, tenant_id: str, step_time: float):
+        self.beats.setdefault(tenant_id, Heartbeat()).beat(step_time)
+
+    def _median(self) -> Optional[float]:
+        recent = [hb.step_times[-1] for hb in self.beats.values()
+                  if hb.step_times]
+        return statistics.median(recent) if recent else None
+
+    def stragglers(self) -> list[str]:
+        med = self._median()
+        if med is None or med == 0:
+            return []
+        return [tid for tid, hb in self.beats.items()
+                if hb.step_times and
+                hb.step_times[-1] > self.straggler_factor * med]
+
+    def dead(self) -> list[str]:
+        now = time.time()
+        return [tid for tid, hb in self.beats.items()
+                if hb.last_beat and now - hb.last_beat > self.dead_after_s]
+
+
+class Supervisor:
+    """Runs tenants under monitoring; migrates stragglers automatically."""
+
+    def __init__(self, manager: SVFFManager,
+                 monitor: Optional[HeartbeatMonitor] = None):
+        self.manager = manager
+        self.monitor = monitor or HeartbeatMonitor()
+        self.events: list[dict] = []
+
+    def run_round(self, steps: int = 1) -> dict:
+        """One supervision round: every running tenant advances `steps`;
+        failures trigger migration; stragglers are rebound."""
+        results = {}
+        for tid, tn in list(self.manager.tenants.items()):
+            if tn.status != "running":
+                continue
+            try:
+                metrics = tn.run_steps(steps)
+                self.monitor.record(tid, tn.step_times[-1])
+                results[tid] = metrics
+            except RuntimeError as e:                 # device failure
+                self.events.append({"kind": "failure", "tenant": tid,
+                                    "err": str(e), "t": time.time()})
+                info = self.manager.migrate(tn)
+                self.events.append({"kind": "migrated", "tenant": tid,
+                                    **info})
+                results[tid] = {"recovered": True}
+        for tid in self.monitor.stragglers():
+            tn = self.manager.tenants.get(tid)
+            if tn is not None and tn.status == "running":
+                self.events.append({"kind": "straggler", "tenant": tid})
+                info = self.manager.migrate(tn)
+                self.events.append({"kind": "migrated", "tenant": tid,
+                                    **info})
+                self.monitor.beats.pop(tid, None)
+        return results

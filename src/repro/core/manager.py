@@ -1,0 +1,241 @@
+"""SVFFManager — the framework's automation layer (paper §IV-B3).
+
+Provides the two user-facing operations:
+
+  init(num_vfs, tenants)   first-time setup: rescan, partition ("set #VF"),
+                           flash (compile executables), attach tenants.
+  reconf(num_vfs, ...)     change the VF partition. With pause enabled
+                           (default), live tenants are PAUSED — not removed
+                           from their guests — the pool is repartitioned,
+                           and tenants are unpaused onto the new layout.
+                           With pause disabled, the standard SR-IOV
+                           detach/attach cycle runs instead (the paper's
+                           baseline column in Tables I/II).
+
+Every reconf returns per-macro-step timings matching Table II rows:
+  rescan / remove_vf / change_num_vf / add_vf.
+
+The manager also owns the fault-tolerance paths (migrate a straggler's
+tenant via pause->rebind; detach snapshots double as restart checkpoints).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Optional, Sequence
+
+import jax
+
+from repro.configs.base import RunConfig
+from repro.core.pool import DevicePool, PoolError
+from repro.core.pause import PhaseTimings, pause_vf, unpause_vf
+from repro.core.records import RecordStore
+from repro.core.snapshot import ConfigSpaceSnapshot
+from repro.core.staging import StagingEngine
+from repro.core.tenant import Tenant
+from repro.core.vf import VFState, VirtualFunction
+from repro.checkpoint.store import CheckpointStore
+
+
+class SVFFManager:
+    def __init__(self, pool: DevicePool, *,
+                 staging: Optional[StagingEngine] = None,
+                 workdir: str = "/tmp/svff",
+                 pause_enabled: bool = True):
+        self.pool = pool
+        self.staging = staging or StagingEngine()
+        self.pause_enabled = pause_enabled
+        self.records = RecordStore(os.path.join(workdir, "records"))
+        self.detach_store_dir = os.path.join(workdir, "detached")
+        self.tenants: dict[str, Tenant] = {}
+        self.snapshots: dict[str, ConfigSpaceSnapshot] = {}   # RAM (paused)
+        self._detach_counter = 0
+
+    # ------------------------------------------------------------------ attach
+    def _free_vf(self) -> VirtualFunction:
+        for vf in self.pool.vfs.values():
+            if vf.state == VFState.DETACHED:
+                return vf
+        raise PoolError("no free VF (increase num_vfs via reconf)")
+
+    def attach(self, tenant: Tenant, vf_id: Optional[str] = None,
+               state=None) -> PhaseTimings:
+        """Full attach path: record validation + bind + record write."""
+        t = PhaseTimings()
+        t0 = time.perf_counter()
+        vf = self.pool.find(vf_id) if vf_id else self._free_vf()
+        try:   # attach re-validates any existing record (QDMA-manager checks)
+            self.records.validate(tenant.tid, self.pool)
+        except Exception:
+            pass
+        t.add("validate", time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        if state is None and tenant.tid in self._detached_steps():
+            # restore from the disk snapshot the detach wrote
+            store = CheckpointStore(self.detach_store_dir)
+            step = self._detached_steps()[tenant.tid]
+            rules = tenant._make_rules(vf)
+            shardings = tenant.state_shardings(rules)
+            from repro.train.step import train_state_shapes
+            like = train_state_shapes(tenant.run)
+            state = store.restore(step, like, shardings)
+            meta = store.metadata(step)
+            tenant.steps_done = meta.get("steps_done", tenant.steps_done)
+        compile_s = tenant.bind(vf, state=state)
+        vf.owner = tenant.tid
+        vf.transition(VFState.ATTACHED)
+        self.tenants[tenant.tid] = tenant
+        t.add("bind", time.perf_counter() - t0)
+        t.add("compile", compile_s)
+
+        t0 = time.perf_counter()
+        self.records.write(tenant.tid, vf.describe(), tenant.run.model.name)
+        t.add("record", time.perf_counter() - t0)
+        return t
+
+    def _detached_steps(self) -> dict:
+        """tenant_id -> checkpoint step for disk-parked detach snapshots."""
+        store = CheckpointStore(self.detach_store_dir)
+        out = {}
+        for s in store.steps():
+            meta = store.metadata(s)
+            out[meta.get("tenant_id", "?")] = s
+        return out
+
+    # ------------------------------------------------------------------ detach
+    def detach(self, tenant: Tenant) -> PhaseTimings:
+        """Standard SR-IOV detach: snapshot to DISK, unbind, free devices.
+        The guest loses the device (tenant.status = detached)."""
+        t = PhaseTimings()
+        vf = self.pool.find(tenant.vf_id)
+        t0 = time.perf_counter()
+        state = tenant.export_state()
+        payload = self.staging.save(state)
+        self._detach_counter += 1
+        store = CheckpointStore(self.detach_store_dir, keep=0)
+        store.save(self._detach_counter, payload,
+                   metadata={"tenant_id": tenant.tid,
+                             "steps_done": tenant.steps_done})
+        t.add("snapshot_disk", time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        for leaf in jax.tree.leaves(state):
+            try:
+                leaf.delete()
+            except Exception:
+                pass
+        tenant.detach()
+        vf.owner = None
+        vf.emulated.clear()
+        # NOTE: unlike pause, detach does NOT release devices — the VF
+        # still exists on the bus with its resources (SR-IOV semantics);
+        # only set_num_vfs / pause change device ownership.
+        vf.transition(VFState.DETACHED)
+        self.records.remove(tenant.tid)
+        t.add("unbind", time.perf_counter() - t0)
+        return t
+
+    # ------------------------------------------------------------------ pause
+    def pause(self, tenant: Tenant) -> PhaseTimings:
+        vf = self.pool.find(tenant.vf_id)
+        snap, t = pause_vf(self.pool, vf, tenant, self.staging)
+        self.snapshots[tenant.tid] = snap        # held in host RAM
+        return t
+
+    def unpause(self, tenant: Tenant, vf_id: Optional[str] = None,
+                num_devices: Optional[int] = None) -> PhaseTimings:
+        snap = self.snapshots.pop(tenant.tid)
+        vf = (self.pool.find(vf_id) if vf_id
+              else self.pool.find(tenant.vf_id))
+        t = unpause_vf(self.pool, vf, tenant, snap, self.staging,
+                       num_devices=num_devices)
+        vf.owner = tenant.tid
+        return t
+
+    # ------------------------------------------------------------------ init
+    def init(self, num_vfs: int, tenants: Sequence[Tenant],
+             devices_per_vf: Optional[int] = None) -> PhaseTimings:
+        t = PhaseTimings()
+        t0 = time.perf_counter()
+        self.pool.rescan()
+        t.add("rescan", time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        self.pool.set_num_vfs(num_vfs, devices_per_vf)
+        t.add("change_num_vf", time.perf_counter() - t0)
+
+        for tn in tenants:
+            ta = self.attach(tn)
+            t.add("add_vf", ta.total)
+        return t
+
+    # ------------------------------------------------------------------ reconf
+    def reconf(self, num_vfs: int, new_tenants: Sequence[Tenant] = (),
+               devices_per_vf: Optional[int] = None,
+               use_pause: Optional[bool] = None) -> dict:
+        """The paper's reconfiguration cycle. Returns Table-II style timings
+        (seconds): {rescan, remove_vf, change_num_vf, add_vf, total}."""
+        use_pause = self.pause_enabled if use_pause is None else use_pause
+        timings = {}
+
+        # 1. rescan — be sure every PF/VF on the bus is discovered
+        t0 = time.perf_counter()
+        self.pool.rescan()
+        timings["rescan"] = time.perf_counter() - t0
+
+        # 2. remove VF — pause (live guests keep their device) or detach
+        t0 = time.perf_counter()
+        live = [tn for tn in self.tenants.values()
+                if tn.status == "running"]
+        for tn in live:
+            if use_pause:
+                self.pause(tn)
+            else:
+                self.detach(tn)
+        timings["remove_vf"] = time.perf_counter() - t0
+
+        # 3. change #VF on the PF
+        t0 = time.perf_counter()
+        self.pool.set_num_vfs(num_vfs, devices_per_vf)
+        timings["change_num_vf"] = time.perf_counter() - t0
+
+        # 4. add VF — unpause previously-paused tenants; attach new ones
+        t0 = time.perf_counter()
+        for tn in live:
+            if use_pause:
+                # paused VFs kept their identity; give them devices again
+                vf = self.pool.find(tn.vf_id)
+                if not vf.devices:
+                    self.pool.allocate(
+                        vf, devices_per_vf
+                        or max(1, self.pool.num_devices // max(num_vfs, 1)))
+                self.unpause(tn)
+            else:
+                self.attach(tn)
+        for tn in new_tenants:
+            self.attach(tn)
+        timings["add_vf"] = time.perf_counter() - t0
+        timings["total"] = sum(timings.values())
+        return timings
+
+    # --------------------------------------------------------- fault tolerance
+    def migrate(self, tenant: Tenant) -> dict:
+        """Straggler/failure mitigation: move a tenant to fresh devices via
+        pause -> release -> allocate elsewhere -> unpause."""
+        t0 = time.perf_counter()
+        vf = self.pool.find(tenant.vf_id)
+        n = vf.num_devices
+        self.pause(tenant)
+        # prefer devices not in the old slice
+        self.pool.allocate(vf, n)
+        self.unpause(tenant)
+        return {"migrate_s": time.perf_counter() - t0,
+                "new_devices": [str(d) for d in vf.devices]}
+
+    def query(self) -> dict:
+        return {"pool": self.pool.query(),
+                "tenants": {t.tid: t.query() for t in self.tenants.values()},
+                "paused_snapshots": {k: v.describe()
+                                     for k, v in self.snapshots.items()},
+                "pause_enabled": self.pause_enabled}

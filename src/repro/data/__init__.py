@@ -1,0 +1,1 @@
+"""Deterministic host-sharded data pipeline."""

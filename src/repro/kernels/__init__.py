@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the substrate's compute hot-spots + the QDMA-
+# analogue pack kernel. Each <name>.py is a pl.pallas_call with explicit
+# BlockSpec VMEM tiling; ops.py holds the jit'd wrappers; ref.py the
+# pure-jnp oracles (also the dry-run lowering path).

@@ -1,0 +1,95 @@
+"""Flash-decode: single-token attention against a long KV cache.
+
+Split-K tiling: grid (B, H, ns) walks the cache in block_k tiles with the
+online-softmax state in VMEM scratch; the valid-length position is a
+prefetched scalar (pltpu.PrefetchScalarGridSpec) so tiles past ``pos`` are
+skipped with pl.when — for a ring cache where pos << T this makes decode
+cost proportional to the *filled* cache, not the allocation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_k: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    pos = pos_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(k_start <= pos)
+    def compute():
+        q = q_ref[0, 0, 0, :].astype(jnp.float32) * scale    # (hd,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bk, hd)
+        s = jax.lax.dot_general(q[None], k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (1,bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0, 0, :] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        )[0].astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, pos, *, block_k: int = 256,
+                 interpret: bool = False):
+    """q: (B,1,H,hd); k,v: (B,T,K,hd); pos: scalar int32 (attend <= pos)."""
+    B, _, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    block_k = min(block_k, T)
+    assert T % block_k == 0
+    grid = (B, H, T // block_k)
+    kern = functools.partial(_kernel, scale=1.0 / math.sqrt(hd),
+                             block_k=block_k)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, hd),
+                             lambda b, h, ki, pos_ref: (b, 0, h, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, ki, pos_ref: (b, ki, h // G, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, ki, pos_ref: (b, ki, h // G, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, hd),
+                                   lambda b, h, ki, pos_ref: (b, 0, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, hd), q.dtype),
+        interpret=interpret,
+    )(pos_arr, q, k, v)

@@ -1,0 +1,74 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the real kernels run; elsewhere (this CPU container, the dry-run)
+they execute in interpret mode or fall back to the jnp oracle — callers
+never branch on backend themselves. ``backend='ref'`` forces the oracle
+(used by the dry-run so cost_analysis sees real FLOPs, not opaque calls).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
+from repro.kernels import qdma_pack as _qp
+from repro.kernels import ssm_scan as _ss
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret",
+                                             "backend"))
+def flash_attention(q, k, v, *, causal: bool = True, interpret: bool = False,
+                    backend: str = "auto"):
+    if backend == "ref" or (backend == "auto" and not _on_tpu()
+                             and not interpret):
+        return _ref.flash_attention_ref(q, k, v, causal=causal)
+    return _fa.flash_attention(q, k, v, causal=causal,
+                               interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "backend"))
+def flash_decode(q, k, v, pos, *, interpret: bool = False,
+                 backend: str = "auto"):
+    if backend == "ref" or (backend == "auto" and not _on_tpu()
+                             and not interpret):
+        return _ref.flash_decode_ref(q, k, v, pos)
+    return _fd.flash_decode(q, k, v, pos,
+                            interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "backend"))
+def ssm_scan(xdt, Bv, Cv, log_a, *, chunk: int = 128,
+             interpret: bool = False, backend: str = "auto"):
+    if backend == "ref" or (backend == "auto" and not _on_tpu()
+                             and not interpret):
+        return _ref.ssm_scan_ref(xdt, Bv, Cv, log_a, chunk=chunk)
+    return _ss.ssm_scan(xdt, Bv, Cv, log_a, chunk=chunk,
+                        interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "backend"))
+def qdma_pack(x, *, block: int = 256, interpret: bool = False,
+              backend: str = "auto"):
+    if backend == "ref" or (backend == "auto" and not _on_tpu()
+                             and not interpret):
+        return _ref.qdma_pack_ref(x, block=block)
+    return _qp.qdma_pack(x, block=block,
+                         interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret", "backend"))
+def qdma_unpack(q, scale, *, dtype: str = "float32",
+                interpret: bool = False, backend: str = "auto"):
+    if backend == "ref" or (backend == "auto" and not _on_tpu()
+                             and not interpret):
+        return _ref.qdma_unpack_ref(q, scale, dtype=dtype)
+    return _qp.qdma_unpack(q, scale, dtype=dtype,
+                           interpret=interpret or not _on_tpu())

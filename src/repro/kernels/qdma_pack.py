@@ -1,0 +1,94 @@
+"""qdma_pack / qdma_unpack — the QDMA descriptor-queue analogue.
+
+Blockwise symmetric int8 quantization used by the StagingEngine to shrink
+pause-snapshot payloads (and, beyond-paper, gradient payloads) before they
+cross the slow host link. Grid-chunked so arbitrary-size state tensors
+stream through a fixed VMEM footprint — exactly the descriptor-queue shape
+of the QDMA hardware (paper §IV-A), with the (rows, block) tile playing the
+role of one descriptor.
+
+pack:   x (M, L) -> q int8 (M, L), scale fp32 (M, L/block)
+unpack: inverse (dequantize).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(x_ref, q_ref, s_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32)                # (rows, tile)
+    rows, tile = x.shape
+    nb = tile // block
+    xb = x.reshape(rows, nb, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0     # (rows, nb)
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
+    q_ref[...] = q.reshape(rows, tile).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _unpack_kernel(q_ref, s_ref, x_ref, *, block: int):
+    q = q_ref[...].astype(jnp.float32)
+    rows, tile = q.shape
+    nb = tile // block
+    x = q.reshape(rows, nb, block) * s_ref[...][..., None]
+    x_ref[...] = x.reshape(rows, tile).astype(x_ref.dtype)
+
+
+def _as2d(x):
+    L = x.shape[-1]
+    return x.reshape(-1, L)
+
+
+def qdma_pack(x, *, block: int = 256, rows_per_tile: int = 256,
+              interpret: bool = False):
+    """x: any shape with shape[-1] % block == 0. Returns (q, scale) shaped
+    like ref.qdma_pack_ref."""
+    shape = x.shape
+    x2 = _as2d(x)
+    M, L = x2.shape
+    rows = min(rows_per_tile, M)
+    while M % rows:
+        rows -= 1
+    grid = (M // rows,)
+    kern = functools.partial(_pack_kernel, block=block)
+    q, scale = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, L), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, L), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, L // block), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, L), jnp.int8),
+                   jax.ShapeDtypeStruct((M, L // block), jnp.float32)],
+        interpret=interpret,
+    )(x2)
+    return (q.reshape(shape),
+            scale.reshape(shape[:-1] + (L // block,)))
+
+
+def qdma_unpack(q, scale, *, dtype="float32", rows_per_tile: int = 256,
+                interpret: bool = False):
+    shape = q.shape
+    block = q.shape[-1] // scale.shape[-1]
+    q2 = _as2d(q)
+    s2 = _as2d(scale)
+    M, L = q2.shape
+    rows = min(rows_per_tile, M)
+    while M % rows:
+        rows -= 1
+    grid = (M // rows,)
+    kern = functools.partial(_unpack_kernel, block=block)
+    x = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, L), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, L // block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, L), jnp.dtype(dtype)),
+        interpret=interpret,
+    )(q2, s2)
+    return x.reshape(shape)

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the ground truth for the per-kernel sweep tests and the lowering
+path used on non-TPU backends / in the dry-run (so cost_analysis counts
+real FLOPs rather than opaque custom calls).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: (B,S,H,hd); k,v: (B,T,K,hd) with H % K == 0. fp32 softmax."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_decode
+# ---------------------------------------------------------------------------
+def flash_decode_ref(q, k, v, pos):
+    """q: (B,1,H,hd); k,v: (B,T,K,hd); attend to indices <= pos."""
+    B, _, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = (jnp.arange(T) <= pos)[None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan (chunked scalar-decay linear recurrence — see models/ssm.py)
+# ---------------------------------------------------------------------------
+def ssm_scan_ref(xdt, Bv, Cv, log_a, chunk: int = 128):
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(xdt, Bv, Cv, log_a, h0=None, chunk=chunk)
+
+
+def ssm_scan_sequential_ref(xdt, Bv, Cv, log_a):
+    """O(S) sequential oracle (slow, exact)."""
+    B, S, H, hd = xdt.shape
+
+    def step(h, t):
+        a = jnp.exp(log_a[:, t].astype(jnp.float32))
+        h = a[..., None, None] * h + jnp.einsum(
+            "bhd,bn->bhdn", xdt[:, t].astype(jnp.float32),
+            Bv[:, t].astype(jnp.float32))
+        y = jnp.einsum("bhdn,bn->bhd", h, Cv[:, t].astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((B, H, hd, Bv.shape[-1]), jnp.float32)
+    hf, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.swapaxes(ys, 0, 1), hf
+
+
+# ---------------------------------------------------------------------------
+# qdma_pack / qdma_unpack
+# ---------------------------------------------------------------------------
+def qdma_pack_ref(x, block: int = 256):
+    """Blockwise symmetric int8 quantization over the last dim.
+    Returns (q int8 same shape, scale fp32 shape[:-1]+(L/block,))."""
+    L = x.shape[-1]
+    assert L % block == 0
+    xb = x.astype(jnp.float32).reshape(x.shape[:-1] + (L // block, block))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale
+
+
+def qdma_unpack_ref(q, scale, dtype="float32"):
+    block = q.shape[-1] // scale.shape[-1]
+    qb = q.reshape(q.shape[:-1] + (scale.shape[-1], block))
+    x = qb.astype(jnp.float32) * scale[..., None]
+    return x.reshape(q.shape).astype(dtype)

@@ -1,0 +1,1 @@
+"""Model substrate: one code path for all 10 assigned architectures."""

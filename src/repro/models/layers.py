@@ -1,0 +1,68 @@
+"""Shared primitive layers (pure functions, explicit params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, split-half (llama) convention.
+
+    x: (B, S, H, hd); positions: (S,) or (B, S) int.
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv      # (..., S, hd/2)
+    if ang.ndim == 2:                                          # (S, hd/2)
+        ang = ang[None]                                        # (1, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]                          # (B|1,S,1,hd/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array,
+           cdt) -> jax.Array:
+    x = x.astype(cdt)
+    h = jax.nn.silu(x @ wg.astype(cdt)) * (x @ wi.astype(cdt))
+    return h @ wo.astype(cdt)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, cdt) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(cdt)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array | None = None):
+    """Depthwise causal conv over time. x: (B, S, C); w: (W, C); b: (C,).
+
+    If ``state`` is given — (B, W-1, C), the tail of the previous segment —
+    it is prepended (decode / chunked prefill), and the new tail returned.
+    """
+    B, S, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+W-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(W):                                        # W is tiny (4)
+        out = out + xp[:, i:i + S, :].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_state = xp[:, S:, :] if W > 1 else state
+    return out.astype(x.dtype), new_state

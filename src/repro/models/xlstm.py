@@ -1,0 +1,216 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, genuinely sequential recurrence).
+
+mLSTM semantics (per head, stabilized — xLSTM paper eq. 19-27):
+  C_t = f_t C_{t-1} + i_t k_t v_t^T      n_t = f_t n_{t-1} + i_t k_t
+  h_t = (q_t·C_t) / max(|q_t·n_t|, exp(-m_t))
+with exponential gates stabilized by the running max m_t. The chunkwise
+form below processes Q-token chunks with intra-chunk pairwise decays and a
+sequential (max-coupled, non-associative) carry across chunks.
+
+sLSTM keeps a per-channel scalar memory with block-diagonal (per-head)
+recurrent weights — it cannot be parallelized over time (hidden state feeds
+the gates), so it runs as a lax.scan over timesteps; this is faithful to
+the paper and its cost is visible in the roofline.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import mlstm_dims, slstm_dims
+
+NEG = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def mlstm_chunked(q, k, v, log_f, log_i, state=None, chunk: int = 128):
+    """q,k,v: (B,S,H,hd); log_f (<=0-ish), log_i: (B,S,H) fp32.
+
+    Returns h (B,S,H,hd) fp32 and final state dict(C,n,m).
+    """
+    B, S, H, hd = q.shape
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    q = q.astype(jnp.float32) / math.sqrt(hd)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    lf = log_f.astype(jnp.float32).reshape(B, nc, Q, H)
+    li = log_i.astype(jnp.float32).reshape(B, nc, Q, H)
+    qc = q.reshape(B, nc, Q, H, hd)
+    kc = k.reshape(B, nc, Q, H, hd)
+    vc = v.reshape(B, nc, Q, H, hd)
+
+    F = jnp.cumsum(lf, axis=2)                                 # (B,nc,Q,H)
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), NEG, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(carry, xs):
+        Cp, np_, mp = carry
+        Fq, liq, qq, kk, vv = xs                # (B,Q,H), ..., (B,Q,H,hd)
+        Ft = jnp.transpose(Fq, (0, 2, 1))       # (B,H,Q)
+        lit = jnp.transpose(liq, (0, 2, 1))
+        # pairwise D_ts = F_t - F_s + log_i_s  (s<=t)
+        Dm = Ft[..., :, None] - Ft[..., None, :] + lit[..., None, :]
+        Dm = jnp.where(mask, Dm, NEG)           # (B,H,Q,Q)
+        m_intra = jnp.max(Dm, axis=-1)          # (B,H,Q)
+        m_inter = Ft + mp[..., None]            # (B,H,Q)
+        m_t = jnp.maximum(m_intra, m_inter)
+        Sm = jnp.exp(Dm - m_t[..., None])       # (B,H,Q,Q)
+        c_t = jnp.exp(m_inter - m_t)            # (B,H,Q)
+        qkT = jnp.einsum("bqhd,bshd->bhqs", qq, kk)
+        A = qkT * Sm
+        num = jnp.einsum("bhqs,bshd->bqhd", A, vv) + \
+            c_t.transpose(0, 2, 1)[..., None] * \
+            jnp.einsum("bqhd,bhde->bqhe", qq, Cp)
+        den = jnp.sum(A, axis=-1).transpose(0, 2, 1) + \
+            c_t.transpose(0, 2, 1) * jnp.einsum("bqhd,bhd->bqh", qq, np_)
+        h = num / jnp.maximum(jnp.abs(den),
+                              jnp.exp(-m_t).transpose(0, 2, 1))[..., None]
+        # ---- end-of-chunk state -----------------------------------------
+        Fl = Ft[..., -1]                        # (B,H)
+        w = Fl[..., None] - Ft + lit            # (B,H,Q) decay to chunk end
+        m_state = jnp.maximum(Fl + mp, jnp.max(w, axis=-1))
+        wS = jnp.exp(w - m_state[..., None])    # (B,H,Q)
+        Cn = jnp.exp(Fl + mp - m_state)[..., None, None] * Cp + \
+            jnp.einsum("bhq,bqhd,bqhe->bhde", wS, kk, vv)
+        nn = jnp.exp(Fl + mp - m_state)[..., None] * np_ + \
+            jnp.einsum("bhq,bqhd->bhd", wS, kk)
+        return (Cn, nn, m_state), h
+
+    xs = (F.transpose(1, 0, 2, 3), li.transpose(1, 0, 2, 3),
+          qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4))
+    (Cn, nn, mn), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return h, {"C": Cn, "n": nn, "m": mn}
+
+
+def mlstm_step(q, k, v, log_f, log_i, state):
+    """Single decode step. q,k,v: (B,H,hd); log_f/log_i: (B,H)."""
+    hd = q.shape[-1]
+    q = q.astype(jnp.float32) / math.sqrt(hd)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    Cp, np_, mp = state["C"], state["n"], state["m"]
+    m_t = jnp.maximum(log_f + mp, log_i)
+    f = jnp.exp(log_f + mp - m_t)
+    i = jnp.exp(log_i - m_t)
+    Cn = f[..., None, None] * Cp + i[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    nn = f[..., None] * np_ + i[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, Cn)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, nn)),
+                      jnp.exp(-m_t))
+    h = num / den[..., None]
+    return h, {"C": Cn, "n": nn, "m": m_t}
+
+
+def mlstm_block(cfg: ModelConfig, p: dict, x, cdt, mode: str = "train",
+                cache: dict | None = None, backend: str = "reference",
+                interpret: bool = False):
+    di, H = mlstm_dims(cfg)
+    hd = cfg.xlstm.head_dim
+    B, S, D = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps).astype(cdt)
+    up = h @ p["w_up"].astype(cdt)
+    xm, z = up[..., :di], up[..., di:]
+    q = (xm @ p["wq"].astype(cdt)).reshape(B, S, H, hd)
+    k = (xm @ p["wk"].astype(cdt)).reshape(B, S, H, hd)
+    v = (xm @ p["wv"].astype(cdt)).reshape(B, S, H, hd)
+    xf = xm.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(xf @ p["w_f"] + p["b_f"])       # (B,S,H)
+    log_i = xf @ p["w_i"] + p["b_i"]
+
+    state = cache.get("mlstm") if cache else None
+    if mode == "decode":
+        y, new_state = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                  log_f[:, 0], log_i[:, 0], state)
+        y = y[:, None]
+    else:
+        y, new_state = mlstm_chunked(q, k, v, log_f, log_i, state,
+                                     chunk=cfg.xlstm.chunk)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y.astype(cdt), p["norm"], cfg.norm_eps)
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(cdt) @ p["w_out"].astype(cdt)
+    new_cache = {"mlstm": new_state} if mode in ("prefill", "decode") else None
+    return out, new_cache
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def _rmul(h, r):
+    """Block-diagonal recurrent matmul. h: (B,D); r: (heads,dh,dh)."""
+    B, D = h.shape
+    heads, dh, _ = r.shape
+    hh = h.reshape(B, heads, dh)
+    return jnp.einsum("bhd,hde->bhe", hh, r).reshape(B, D)
+
+
+def slstm_block(cfg: ModelConfig, p: dict, x, cdt, mode: str = "train",
+                cache: dict | None = None, **_):
+    heads, dh, d_up = slstm_dims(cfg)
+    B, S, D = x.shape
+    xin = rms_norm(x, p["ln"], cfg.norm_eps).astype(cdt)
+    # input projections for all timesteps up-front (parallel part)
+    zx = (xin @ p["w_z"].astype(cdt)).astype(jnp.float32)
+    ix = (xin @ p["w_i"].astype(cdt)).astype(jnp.float32)
+    fx = (xin @ p["w_f"].astype(cdt)).astype(jnp.float32)
+    ox = (xin @ p["w_o"].astype(cdt)).astype(jnp.float32)
+
+    if cache and "slstm" in cache:
+        st = cache["slstm"]
+        carry0 = (st["h"], st["c"], st["n"], st["m"])
+    else:
+        zero = jnp.zeros((B, D), jnp.float32)
+        carry0 = (zero, zero, zero, jnp.full((B, D), -30.0, jnp.float32))
+
+    rz, ri, rf, ro = (p["r_z"].astype(jnp.float32),
+                      p["r_i"].astype(jnp.float32),
+                      p["r_f"].astype(jnp.float32),
+                      p["r_o"].astype(jnp.float32))
+    bz, bi, bf, bo = p["b_z"], p["b_i"], p["b_f"], p["b_o"]
+
+    def step(carry, xs):
+        hp, cp, npr, mp = carry
+        zt, it, ft, ot = xs
+        z = jnp.tanh(zt + _rmul(hp, rz) + bz)
+        li = it + _rmul(hp, ri) + bi
+        lf = jax.nn.log_sigmoid(ft + _rmul(hp, rf) + bf)
+        m = jnp.maximum(lf + mp, li)
+        i = jnp.exp(li - m)
+        f = jnp.exp(lf + mp - m)
+        c = f * cp + i * z
+        n = f * npr + i
+        o = jax.nn.sigmoid(ot + _rmul(hp, ro) + bo)
+        hn = o * c / jnp.maximum(n, 1e-6)
+        return (hn, c, n, m), hn
+
+    xs = (zx.transpose(1, 0, 2), ix.transpose(1, 0, 2),
+          fx.transpose(1, 0, 2), ox.transpose(1, 0, 2))
+    (hf, cf, nf, mf), hs = jax.lax.scan(step, carry0, xs)
+    y = hs.transpose(1, 0, 2)                                  # (B,S,D)
+    y = rms_norm(y.astype(cdt), p["norm"], cfg.norm_eps).astype(cdt)
+    # GLU up/down
+    g = jax.nn.silu((y @ p["up_wg"].astype(cdt)).astype(jnp.float32))
+    u = (y @ p["up_wi"].astype(cdt)).astype(jnp.float32)
+    out = (g * u).astype(cdt) @ p["up_wo"].astype(cdt)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"slstm": {"h": hf, "c": cf, "n": nf, "m": mf}}
+    return out, new_cache

@@ -1,0 +1,1 @@
+"""Distributed runtime: partitioning, HLO analysis, roofline, pipeline PP."""

@@ -1,0 +1,78 @@
+"""Optional pipeline parallelism: a GPipe-style microbatched pipeline over
+a dedicated "pipe" mesh axis, built on shard_map + collective_permute.
+
+Not used by the fixed production meshes (axes pod/data/model — see
+DESIGN.md §3); provided for deployments that trade a mesh axis for
+pipeline stages (e.g. very deep models across slower inter-slice links).
+
+The schedule is plain GPipe: M microbatches flow through S stages in
+M + S - 1 ticks; each tick every stage computes its resident microbatch
+and the activations rotate one hop with collective_permute. Bubble
+fraction = (S-1)/(M+S-1), reported by ``bubble_fraction``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def bubble_fraction(num_microbatches: int, num_stages: int) -> float:
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x, mesh: Mesh,
+                   axis: str = "pipe"):
+    """Run ``y = stage_{S-1}(...stage_0(x))`` as a GPipe pipeline.
+
+    stage_fn: (params_for_one_stage, (mb, ...)) -> (mb, ...)   same shape
+    stage_params: pytree with leading dim S (one slice per stage), sharded
+                  over ``axis``
+    x: (M, mb, ...) microbatches (replicated over ``axis``)
+    Returns (M, mb, ...) outputs (replicated).
+    """
+    S = mesh.shape[axis]
+    M = x.shape[0]
+
+    def per_stage(params, xs):
+        params = jax.tree.map(lambda p: p[0], params)   # local stage slice
+        idx = jax.lax.axis_index(axis)
+        T = M + S - 1
+        state = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+        perm = [(i, (i + 1) % S) for i in range(S)]
+
+        def tick(t, carry):
+            state, outs = carry
+            # stage 0 ingests microbatch t (while available)
+            mb_in = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, M - 1), axis=0, keepdims=False)
+            inp = jnp.where(idx == 0, mb_in, state)
+            y = stage_fn(params, inp)
+            # the last stage emits microbatch t-(S-1)
+            ot = t - (S - 1)
+            valid = (idx == S - 1) & (ot >= 0) & (ot < M)
+            outs = jax.lax.cond(
+                valid,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.clip(ot, 0, M - 1), axis=0),
+                lambda o: o, outs)
+            state = jax.lax.ppermute(y, axis, perm)
+            return state, outs
+
+        _, outs = jax.lax.fori_loop(0, T, tick, (state, outs))
+        # only the last stage holds real outputs; share them around
+        outs = jax.lax.psum(
+            jnp.where(idx == S - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    others = tuple(None for _ in range(x.ndim - 1))
+    xspec = P(*((None,) + others))
+    fn = shard_map(per_stage, mesh=mesh, in_specs=(pspec, xspec),
+                   out_specs=xspec, check_vma=False)
+    return fn(stage_params, x)

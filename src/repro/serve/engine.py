@@ -1,0 +1,170 @@
+"""Serving engine: slot-based continuous batching over decode_step.
+
+Requests are prefillled individually (B=1), inserted into a free slot of the
+batched decode state, and decoded together; finished slots are recycled
+without stopping the batch (vLLM-style, minus paged KV — the cache is a
+dense per-slot ring). The engine runs as a Tenant workload under the SVFF
+manager, so it can be paused/unpaused mid-serving (requests queue while
+paused — the guest keeps its 'device').
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.models.model import Model, build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                   # -1: never stops early
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, run: RunConfig, params, *, slots: int = 4,
+                 max_len: int = 256, rules=None):
+        self.run = run
+        self.model = build_model(run)
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: collections.deque[Request] = collections.deque()
+        self.active: list[Optional[Request]] = [None] * slots
+        self.pos = np.full((slots,), -1, np.int64)      # last written index
+        self.last_token = np.zeros((slots,), np.int32)
+        self.paused = False
+        from repro.train.step import make_serve_steps
+        prefill, decode = make_serve_steps(run, rules)
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+        self._cache = None                              # lazy batched cache
+
+    # -- cache plumbing -------------------------------------------------------
+    def _ensure_cache(self):
+        if self._cache is None:
+            shape = dataclasses.replace(self.run.shape, seq_len=self.max_len,
+                                        global_batch=self.slots)
+            self._cache = self.model.init_cache(shape)
+
+    def _insert(self, slot: int, req_cache, prompt_len: int):
+        """Write a (1, prefill_len, ...) request cache into batch slot."""
+        def one(path, batch_leaf, req_leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if name in ("k", "v", "xk", "xv"):
+                L = req_leaf.shape[2]
+                return jax.lax.dynamic_update_slice(
+                    batch_leaf, req_leaf.astype(batch_leaf.dtype),
+                    (0, slot, 0, 0, 0))
+            return jax.lax.dynamic_update_slice(
+                batch_leaf, req_leaf.astype(batch_leaf.dtype),
+                (0, slot) + (0,) * (batch_leaf.ndim - 2))
+        self._cache = jax.tree_util.tree_map_with_path(
+            one, self._cache, req_cache)
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def pause(self):
+        self.paused = True
+
+    def unpause(self):
+        self.paused = False
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                plen = len(req.prompt)
+                assert plen + req.max_new_tokens <= self.max_len
+                self._ensure_cache()
+                batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+                cfg = self.run.model
+                if cfg.frontend.kind == "vision":
+                    batch["patches"] = jnp.zeros(
+                        (1, cfg.frontend.num_patches, cfg.d_model),
+                        jnp.bfloat16)
+                if cfg.is_encoder_decoder:
+                    Te = max(1, plen // cfg.frontend.frame_ratio)
+                    batch["frames"] = jnp.zeros((1, Te, cfg.d_model),
+                                                jnp.bfloat16)
+                req_cache, last_logits = self._prefill(self.params, batch)
+                self._insert(s, req_cache, plen)
+                tok = int(jnp.argmax(last_logits[0]))
+                req.out.append(tok)
+                npatch = (cfg.frontend.num_patches
+                          if cfg.frontend.kind == "vision" else 0)
+                if tok == req.eos_id or req.max_new_tokens <= 1:
+                    req.done = True        # finished at prefill
+                    continue
+                self.active[s] = req
+                self.pos[s] = npatch + plen - 1
+                self.last_token[s] = tok
+
+    def step(self) -> int:
+        """One engine iteration: admit + one batched decode. Returns number
+        of active slots (0 = idle). No-op while paused."""
+        if self.paused:
+            return 0
+        self._admit()
+        act = [s for s in range(self.slots) if self.active[s] is not None]
+        if not act:
+            return 0
+        self._ensure_cache()
+        tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
+        pos = jnp.asarray(np.maximum(self.pos + 1, 0), jnp.int32)
+        logits, self._cache = self._decode(self.params, self._cache,
+                                           tokens, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s in act:
+            req = self.active[s]
+            self.pos[s] += 1
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.last_token[s] = tok
+            if (len(req.out) >= req.max_new_tokens or tok == req.eos_id
+                    or self.pos[s] + 1 >= self.max_len):
+                req.done = True
+                self.active[s] = None
+                self._reset_slot(s)
+        return len(act)
+
+    def _reset_slot(self, slot: int):
+        """Zero a finished slot's recurrent state (attn KV is masked by pos
+        so it needs no reset)."""
+        def one(path, leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if name in ("k", "v", "xk", "xv"):
+                return leaf
+            fill = -1e30 if name == "m" else 0.0
+            return leaf.at[:, slot].set(fill)
+        self._cache = jax.tree_util.tree_map_with_path(one, self._cache)
+        self.pos[slot] = -1
+
+    def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return done
+
+    # -- state for SVFF pause (config-space save) ------------------------------
+    def export_state(self) -> dict:
+        return {"cache": self._cache, "pos": self.pos.copy(),
+                "last_token": self.last_token.copy()}
+
+    def import_state(self, st: dict):
+        self._cache = st["cache"]
+        self.pos = st["pos"]
+        self.last_token = st["last_token"]

@@ -1,0 +1,187 @@
+"""Optimizers (self-contained, optax-free): AdamW and Adafactor.
+
+Both expose:
+  init(params)                      -> opt_state (pytree)
+  update(grads, state, params, lr)  -> (new_params, new_state)
+  state_specs(rules, param_specs, param_shapes) -> PartitionSpec tree
+    (optimizer state shards exactly like the params it mirrors — ZeRO-3
+     falls out of FSDP param sharding; Adafactor's factored moments drop
+     the corresponding spec dims).
+
+Adafactor (factored second moments, no first moment) is what the 400B-class
+archs (arctic, jamba) use so optimizer state fits v5e HBM — see DESIGN.md.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as Pspec
+
+from repro.configs.base import OptimizerConfig
+
+
+def lr_schedule(cfg: OptimizerConfig, total_steps: int = 10000):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup, 1))
+        t = jnp.clip((step - cfg.warmup) / max(total_steps - cfg.warmup, 1),
+                     0.0, 1.0)
+        cos = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * t))
+        return cfg.lr * warm * cos
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+@dataclass
+class Optimizer:
+    cfg: OptimizerConfig
+    init: Callable
+    update: Callable                 # (grads, state, params, lr) -> (p, s)
+    state_specs: Callable            # (rules, param_specs, shapes) -> specs
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def make_adamw(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        b1, b2 = cfg.beta1, cfg.beta2
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mh, vh = m / bc1, v / bc2
+            step = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:                      # decoupled wd on matrices
+                step = step + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x:
+                             isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x:
+                             isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x:
+                             isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "count": c}
+
+    def state_specs(rules, param_specs, shapes):
+        return {"m": param_specs, "v": param_specs, "count": Pspec()}
+
+    return Optimizer(cfg, init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored v for ndim>=2 over the last two dims)
+# ---------------------------------------------------------------------------
+def make_adafactor(cfg: OptimizerConfig) -> Optimizer:
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        beta2 = 1.0 - (c.astype(jnp.float32) ** -0.8)
+        eps = 1e-30
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if factored(p):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                step = g32 * rfac[..., None] * cfac[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                step = g32 * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS <= 1) — adafactor's stability trick
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + eps)
+            step = step / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                step = step + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), ns
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["f"])
+        flat_p = jax.tree.leaves(params)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_s = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return new_p, {"f": new_s, "count": c}
+
+    def state_specs(rules, param_specs, shapes):
+        def one(spec, shape):
+            dims = shape.shape if hasattr(shape, "shape") else shape
+            sp = tuple(spec) + (None,) * (len(dims) - len(tuple(spec)))
+            if len(dims) >= 2 and dims[-1] > 1 and dims[-2] > 1:
+                return {"vr": Pspec(*sp[:-1]),
+                        "vc": Pspec(*(sp[:-2] + sp[-1:]))}
+            return {"v": Pspec(*sp)}
+        f = jax.tree.map(one, param_specs, shapes,
+                         is_leaf=lambda x: isinstance(x, Pspec))
+        return {"f": f, "count": Pspec()}
+
+    return Optimizer(cfg, init, update, state_specs)
+
+
+def make_sgd(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) -
+                          lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, {"count": state["count"] + 1}
+
+    def state_specs(rules, param_specs, shapes):
+        return {"count": Pspec()}
+
+    return Optimizer(cfg, init, update, state_specs)
+
+
+def build_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    return {"adamw": make_adamw, "adafactor": make_adafactor,
+            "sgd": make_sgd}[cfg.name](cfg)

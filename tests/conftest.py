@@ -1,0 +1,10 @@
+import os
+
+# Tests must see the real (single) CPU device — the 512-device override is
+# strictly dryrun.py-local. Some tests spawn subprocesses that set their own
+# XLA_FLAGS (multi-device pool tests).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

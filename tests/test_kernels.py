@@ -1,0 +1,154 @@
+"""Per-kernel sweeps: shapes x dtypes, assert_allclose vs the ref.py
+oracles (kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.qdma_pack import qdma_pack, qdma_unpack
+from repro.kernels.ssm_scan import ssm_scan
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,K,hd,causal", [
+    (1, 128, 4, 4, 64, True),        # MHA causal
+    (2, 256, 4, 2, 64, True),        # GQA
+    (1, 256, 8, 1, 128, True),       # MQA, wide head
+    (2, 128, 2, 2, 64, False),       # bidirectional (encoder)
+    (1, 384, 6, 3, 64, True),        # non-pow2 grid
+])
+def test_flash_attention_sweep(B, S, H, K, hd, causal, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = rand(ks[0], (B, S, H, hd), dtype)
+    k = rand(ks[1], (B, S, K, hd), dtype)
+    v = rand(ks[2], (B, S, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 32)])
+def test_flash_attention_block_shapes(blocks):
+    bq, bk = blocks
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = rand(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = rand(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = rand(ks[2], (1, 256, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,K,hd,pos", [
+    (1, 256, 4, 4, 64, 255),
+    (2, 512, 4, 2, 64, 17),          # pos inside first block
+    (1, 1024, 8, 2, 128, 700),
+    (2, 256, 2, 1, 64, 0),           # single valid position
+])
+def test_flash_decode_sweep(B, T, H, K, hd, pos, dtype):
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = rand(ks[0], (B, 1, H, hd), dtype)
+    k = rand(ks[1], (B, T, K, hd), dtype)
+    v = rand(ks[2], (B, T, K, hd), dtype)
+    out = flash_decode(q, k, v, pos, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, pos)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_decode_matches_flash_attention_last_row():
+    """decode(pos=S-1) == last row of causal flash_attention."""
+    ks = jax.random.split(jax.random.key(3), 3)
+    S = 256
+    q = rand(ks[0], (1, S, 4, 64), jnp.float32)
+    k = rand(ks[1], (1, S, 2, 64), jnp.float32)
+    v = rand(ks[2], (1, S, 2, 64), jnp.float32)
+    full = flash_attention(q, k, v, causal=True, interpret=True)
+    dec = flash_decode(q[:, -1:], k, v, S - 1, interpret=True)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,hd,N,chunk", [
+    (1, 128, 2, 32, 16, 32),
+    (2, 256, 4, 64, 64, 64),
+    (1, 512, 1, 128, 16, 128),
+])
+def test_ssm_scan_sweep(B, S, H, hd, N, chunk, dtype):
+    ks = jax.random.split(jax.random.key(4), 4)
+    xdt = rand(ks[0], (B, S, H, hd), dtype)
+    Bv = rand(ks[1], (B, S, N), dtype)
+    Cv = rand(ks[2], (B, S, N), dtype)
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    y, hf = ssm_scan(xdt, Bv, Cv, la, chunk=chunk, interpret=True)
+    yr, hfr = ref.ssm_scan_sequential_ref(xdt, Bv, Cv, la)
+    tol = 5e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfr), atol=tol,
+                               rtol=tol)
+
+
+def test_ssm_scan_matches_chunked_ref():
+    ks = jax.random.split(jax.random.key(5), 4)
+    B, S, H, hd, N = 2, 256, 3, 32, 16
+    xdt = rand(ks[0], (B, S, H, hd), jnp.float32)
+    Bv = rand(ks[1], (B, S, N), jnp.float32)
+    Cv = rand(ks[2], (B, S, N), jnp.float32)
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    y, hf = ssm_scan(xdt, Bv, Cv, la, chunk=64, interpret=True)
+    yr, hfr = ref.ssm_scan_ref(xdt, Bv, Cv, la, chunk=64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4,
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,block", [
+    ((4, 512), 256), ((3, 7, 512), 128), ((128, 256), 256), ((2, 1024), 512),
+])
+def test_qdma_pack_sweep(shape, block, dtype):
+    x = rand(jax.random.key(6), shape, dtype)
+    q, s = qdma_pack(x, block=block, interpret=True)
+    qr, sr = ref.qdma_pack_ref(x, block=block)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    # identical up to round-to-nearest ties on values landing exactly on a
+    # quantization boundary (last-ulp division-order differences)
+    diff = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    assert diff.max() <= 1 and (diff > 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # round-trip error bounded by the quantization step
+    xx = qdma_unpack(q, s, dtype="float32", interpret=True)
+    step = np.asarray(s)[..., :, None] * np.ones((1,) * s.ndim + (block,))
+    err = np.abs(np.asarray(xx) -
+                 np.asarray(x, np.float32).reshape(xx.shape))
+    assert (err <= 0.5 * step.reshape(err.shape) + 1e-6).all()
+
+
+def test_qdma_pack_preserves_zeros_and_extremes():
+    x = jnp.zeros((4, 512), jnp.float32).at[0, 0].set(1000.0)
+    q, s = qdma_pack(x, block=256, interpret=True)
+    xx = qdma_unpack(q, s, interpret=True)
+    assert float(xx[0, 0]) == pytest.approx(1000.0, rel=1e-2)
+    assert float(jnp.abs(xx[1:]).max()) == 0.0

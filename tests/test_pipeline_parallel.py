@@ -1,0 +1,55 @@
+"""Pipeline-parallel wrapper: GPipe schedule == sequential composition."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.runtime.pipeline import bubble_fraction
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(1, 4) == pytest.approx(3 / 4)
+    assert bubble_fraction(16, 4) == pytest.approx(3 / 19)
+    assert bubble_fraction(8, 1) == 0.0
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    prog = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.runtime.pipeline import pipeline_apply
+
+mesh = jax.make_mesh((4,), ("pipe",))
+S, M, mb, D = 4, 8, 2, 16
+k = jax.random.key(0)
+W = jax.random.normal(k, (S, D, D)) * 0.3
+b = jax.random.normal(jax.random.key(1), (S, D)) * 0.1
+x = jax.random.normal(jax.random.key(2), (M, mb, D))
+
+def stage(params, h):
+    w, bb = params
+    return jnp.tanh(h @ w + bb)
+
+want = x
+for s in range(S):
+    want = stage((W[s], b[s]), want.reshape(M * mb, D)).reshape(M, mb, D)
+
+got = jax.jit(lambda p, xx: pipeline_apply(stage, p, xx, mesh))((W, b), x)
+err = float(jnp.max(jnp.abs(got - want)))
+print(json.dumps({"err": err}))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 1e-5, res

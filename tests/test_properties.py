@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.pool import DevicePool, _default_mesh_shape
+from repro.core.staging import StagingEngine
+from repro.core.vf import VFState
+from repro.kernels import ref
+from repro.runtime.hlo import collective_stats
+
+HSET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+@given(n=st.integers(1, 4096))
+@HSET
+def test_default_mesh_shape_factors(n):
+    a, b = _default_mesh_shape(n)
+    assert a * b == n and a >= b
+
+
+@given(ndev=st.integers(1, 16), nvf=st.integers(0, 8),
+       per=st.integers(1, 4))
+@HSET
+def test_pool_partition_invariants(ndev, nvf, per):
+    """Whatever the requested partition, VF device sets stay disjoint,
+    within-pool, and correctly sized — or the pool refuses."""
+    devices = [f"dev{i}" for i in range(ndev)]   # pool never touches them
+    pool = DevicePool(devices=devices)
+    pool._rescanned = True
+    try:
+        created = pool.set_num_vfs(nvf, devices_per_vf=per)
+    except Exception:
+        assert nvf * per > ndev or nvf > pool.max_vfs
+        return
+    assert len(created) == nvf
+    seen = set()
+    for vf in pool.vfs.values():
+        assert len(vf.devices) == math.prod(vf.mesh_shape)
+        for d in vf.devices:
+            assert d not in seen
+            assert d in devices
+            seen.add(d)
+
+
+# ---------------------------------------------------------------------------
+@given(shape=st.sampled_from([(4, 256), (2, 3, 512), (16, 1024)]),
+       block=st.sampled_from([128, 256]),
+       scale_pow=st.integers(-8, 8))
+@HSET
+def test_qdma_roundtrip_error_bound(shape, block, scale_pow):
+    """Quantization round-trip error <= half a quantization step, for any
+    magnitude scale (property over 16 orders of magnitude)."""
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal(shape) * (10.0 ** scale_pow)).astype(np.float32)
+    q, s = ref.qdma_pack_ref(jnp.asarray(x), block=block)
+    xx = np.asarray(ref.qdma_unpack_ref(q, s))
+    step = np.repeat(np.asarray(s), block, axis=-1).reshape(x.shape)
+    assert (np.abs(xx - x) <= 0.5 * step + 1e-30).all()
+
+
+@given(seed=st.integers(0, 10_000), compression=st.sampled_from(
+    ["none", "int8"]))
+@HSET
+def test_staging_roundtrip(seed, compression):
+    """save->restore is identity (bit-exact without compression; bounded
+    error with int8) and preserves tree structure/dtypes."""
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.standard_normal((8, 512)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.integers(0, 100, (4,)), jnp.int32),
+                  "d": jnp.asarray(rng.standard_normal((3, 5)),
+                                   jnp.float32)},
+            "s": jnp.float32(3.25)}
+    eng = StagingEngine(num_queues=2, compression=compression,
+                        min_quant_size=1024)
+    staged = eng.save(tree)
+    out = eng.restore(staged)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for k, (x, y) in enumerate(zip(jax.tree.leaves(tree),
+                                   jax.tree.leaves(out))):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        if compression == "none":
+            np.testing.assert_array_equal(x, y)
+        else:
+            np.testing.assert_allclose(x, y, atol=np.abs(x).max() / 64)
+
+
+# ---------------------------------------------------------------------------
+@given(a=st.integers(1, 64), b=st.integers(1, 64), c=st.integers(1, 64))
+@HSET
+def test_collective_parser_counts_bytes(a, b, c):
+    """HLO parser sums shapes correctly for synthetic instruction lines."""
+    txt = (f"  %ag = bf16[{a},{b}] all-gather(x), dims={{0}}\n"
+           f"  %ar = (f32[{c}], f32[{a},{b},{c}]) all-reduce(y, z)\n"
+           f"  %nope = f32[{a}] add(u, v)\n")
+    stats = collective_stats(txt)
+    assert stats.bytes_by_op["all-gather"] == a * b * 2
+    assert stats.bytes_by_op["all-reduce"] == 4 * c + 4 * a * b * c
+    assert stats.total_count == 2
+
+
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 1000), S=st.sampled_from([32, 64]),
+       chunk=st.sampled_from([8, 16, 32]))
+@HSET
+def test_ssd_chunk_invariance(seed, S, chunk):
+    """Chunk size is an implementation detail: results must not depend on
+    it (the recurrence semantics are chunk-free)."""
+    from repro.models.ssm import ssd_chunked
+    rng = jax.random.key(seed)
+    ks = jax.random.split(rng, 4)
+    B, H, hd, N = 1, 2, 8, 4
+    xdt = jax.random.normal(ks[0], (B, S, H, hd))
+    Bv = jax.random.normal(ks[1], (B, S, N))
+    Cv = jax.random.normal(ks[2], (B, S, N))
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    y1, h1 = ssd_chunked(xdt, Bv, Cv, la, chunk=chunk)
+    y2, h2 = ssd_chunked(xdt, Bv, Cv, la, chunk=S)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4,
+                               rtol=1e-4)
+
+
+@given(seed=st.integers(0, 1000))
+@HSET
+def test_attention_gqa_equals_repeated_mha(seed):
+    """GQA(K) == MHA with kv heads explicitly repeated G times."""
+    from repro.models.attention import attention_ref
+    ks = jax.random.split(jax.random.key(seed), 3)
+    B, S, H, K, hd = 1, 16, 4, 2, 8
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    o1 = attention_ref(q, k, v, causal=True)
+    krep = jnp.repeat(k, H // K, axis=2)
+    vrep = jnp.repeat(v, H // K, axis=2)
+    o2 = attention_ref(q, krep, vrep, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5,
+                               rtol=1e-5)

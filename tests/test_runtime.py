@@ -1,0 +1,138 @@
+"""Runtime-layer unit tests: sharding rules, roofline math, optimizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (MULTI_POD_MESH, OptimizerConfig, SINGLE_POD_MESH,
+                           make_run_config)
+from repro.models.params import param_shapes
+from repro.runtime.partitioning import ShardingRules
+from repro.runtime.roofline import Roofline, model_flops_estimate
+from repro.train.optim import build_optimizer, clip_by_global_norm
+
+
+def rules_for(arch, shape="train_4k", mesh=SINGLE_POD_MESH, **kw):
+    run = make_run_config(arch, shape, mesh=mesh, **kw)
+    return run, ShardingRules(mesh, run)
+
+
+# ---------------------------------------------------------------------------
+def test_param_specs_cover_all_archs():
+    """Every leaf of every full-size arch gets a divisibility-valid spec."""
+    from repro.configs import list_archs
+    for arch in list_archs():
+        run, rules = rules_for(arch)
+        shapes = param_shapes(run.model)
+        specs = rules.param_specs(shapes)
+
+        def check(path, sd, spec):
+            for dim, ax in zip(sd.shape, tuple(spec) + (None,) *
+                               (len(sd.shape) - len(tuple(spec)))):
+                if ax is None:
+                    continue
+                sz = rules._size(ax)
+                assert dim % sz == 0, (arch, path, sd.shape, spec)
+        jax.tree_util.tree_map_with_path(
+            lambda p, s, sp: check(p, s, sp), shapes, specs,
+            is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+
+
+def test_attn_mode_selection():
+    _, r_phi = rules_for("phi3-mini-3.8b")        # kv=32 % 16 == 0
+    assert r_phi.attn_mode(32) == "heads"
+    _, r_llama = rules_for("llama3-8b")           # kv=8 % 16 != 0
+    assert r_llama.attn_mode(32) == "seq"
+    _, r_unit = rules_for("llama3-8b", mesh=__import__(
+        "repro.configs", fromlist=["UNIT_MESH"]).UNIT_MESH)
+    assert r_unit.attn_mode(32) == "heads"        # no model axis
+
+
+def test_kv_cache_spec_long_context_batch1():
+    """long_500k (batch 1): batch can't shard, sequence shards over all."""
+    run, rules = rules_for("jamba-1.5-large-398b", "long_500k")
+    spec = rules.spec("kv_cache", (1, 524288, 8, 128))
+    assert spec[0] is None
+    assert spec[1] is not None                    # seq sharded
+
+
+def test_moe_expert_spec():
+    run, rules = rules_for("arctic-480b")
+    spec = rules.spec("expert", (128, 2048, 10, 7168))
+    assert spec[0] == "model" and spec[1] == "data"
+
+
+def test_multipod_fsdp_axes():
+    run, rules = rules_for("llama3-8b", mesh=MULTI_POD_MESH)
+    assert rules.dp_axes == ("pod", "data")
+    spec = rules.param_spec("params/decoder/layers/block0/ffn/wi",
+                            (32, 4096, 14336))
+    assert spec[0] is None                        # stacked period dim
+    assert spec[1] == ("pod", "data")             # FSDP over both
+    assert spec[2] == "model"
+
+
+def test_lm_head_sp_mode():
+    from repro.configs import ShardingConfig
+    run, rules = rules_for("llama3-8b",
+                           sharding=ShardingConfig(seq_shard_acts=True))
+    spec = rules.param_spec("params/lm_head", (4096, 128256))
+    assert spec[1] is None                        # vocab replicated in SP
+
+
+# ---------------------------------------------------------------------------
+def test_roofline_terms_and_bound():
+    rf = Roofline(arch="x", shape="train_4k", mesh="single", chips=256,
+                  hlo_flops=197e12, hlo_bytes=819e9 * 2,
+                  collective_bytes=50e9,
+                  collective_detail={"bytes_by_op": {"all-reduce": 50e9}},
+                  model_flops=197e12 * 256)
+    assert rf.compute_s == pytest.approx(1.0)
+    assert rf.memory_s == pytest.approx(2.0)
+    assert rf.collective_s == pytest.approx(2.0)  # AR counts 2x
+    assert rf.bound in ("memory", "collective")
+    assert rf.step_s == pytest.approx(2.0)
+    assert rf.mfu == pytest.approx(0.5)
+
+
+def test_model_flops_estimate_kinds():
+    from repro.configs import SHAPES, get_model_config
+    cfg = get_model_config("llama3-8b")
+    n = cfg.active_param_count()
+    assert model_flops_estimate(cfg, SHAPES["train_4k"]) == pytest.approx(
+        6.0 * n * 256 * 4096)
+    assert model_flops_estimate(cfg, SHAPES["decode_32k"]) == pytest.approx(
+        2.0 * n * 128)
+    moe = get_model_config("olmoe-1b-7b")
+    assert moe.active_param_count() < moe.param_count()
+
+
+# ---------------------------------------------------------------------------
+def test_adamw_decreases_quadratic():
+    opt = build_optimizer(OptimizerConfig(name="adamw", lr=0.1))
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(50):
+        grads = {"w": 2 * params["w"]}            # d/dw w^2
+        params, state = opt.update(grads, state, params, 0.1)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_adafactor_factored_state_small():
+    opt = build_optimizer(OptimizerConfig(name="adafactor"))
+    params = {"w": jnp.zeros((128, 256)), "b": jnp.zeros((128,))}
+    state = opt.init(params)
+    assert state["f"]["w"]["vr"].shape == (128,)
+    assert state["f"]["w"]["vc"].shape == (256,)
+    assert state["f"]["b"]["v"].shape == (128,)
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(state))
+    assert nbytes < params["w"].nbytes / 10       # ZeRO-friendly
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    gn2 = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert gn2 == pytest.approx(1.0, rel=1e-4)

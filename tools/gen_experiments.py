@@ -1,0 +1,96 @@
+"""Assemble EXPERIMENTS.md from results/ JSONs + the narrative sections.
+
+Usage: PYTHONPATH=src python tools/gen_experiments.py
+"""
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, ROOT)
+
+
+def jload(p, default=None):
+    try:
+        with open(os.path.join(ROOT, p)) as f:
+            return json.load(f)
+    except Exception:
+        return default
+
+
+def roofline_md(dirname):
+    from benchmarks.roofline_table import load_rows, markdown
+    rows = load_rows(os.path.join(ROOT, dirname))
+    return markdown(rows)
+
+
+def table1_md():
+    rows = jload("results/bench/table1.json", [])
+    out = ["| #VF | Detach/Attach avg ms (σ) | Pause/Unpause avg ms (σ) | "
+           "overhead % | ms/VF delta |", "|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['num_vf']} | {r['detach_attach_ms']:.1f} "
+            f"({r['detach_attach_std']:.1f}) | {r['pause_unpause_ms']:.1f} "
+            f"({r['pause_unpause_std']:.1f}) | {r['overhead_pct']:+.1f} "
+            f"| {r['ms_per_vf_delta']:+.1f} |")
+    return "\n".join(out)
+
+
+def table2_md():
+    rows = jload("results/bench/table2.json", [])
+    steps = ["rescan", "remove_vf", "change_num_vf", "add_vf", "total"]
+    hdr = "| step | " + " | ".join(
+        f"{r['num_vf']}VF D/A | {r['num_vf']}VF P/U" for r in rows) + " |"
+    sep = "|" + "---|" * (1 + 2 * len(rows))
+    out = [hdr, sep]
+    for s in steps:
+        cells = []
+        for r in rows:
+            cells.append(f"{r[f'DA_{s}_ms']:.1f}")
+            cells.append(f"{r[f'PU_{s}_ms']:.1f}")
+        out.append(f"| {s} | " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def pause_path_md():
+    rows = jload("results/bench/pause_path.json", [])
+    out = ["| variant | save ms | bytes moved MB | max rel err | note |",
+           "|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['name']} | {r['save_ms']:.1f} "
+                   f"| {r['bytes_moved']/1e6:.1f} | {r['max_rel_err']:.4f} "
+                   f"| {r['note']} |")
+    return "\n".join(out)
+
+
+def throughput_md():
+    r = jload("results/bench/throughput.json", {})
+    if not r:
+        return "(run benchmarks.run --only throughput)"
+    return (f"- step time before pause: {r['step_ms_before_pause']:.1f} ms; "
+            f"after unpause: {r['step_ms_after_unpause']:.1f} ms "
+            f"({r['pause_cycle_overhead_pct']:+.1f}%)\n"
+            f"- snapshot: plain {r['snapshot_none_bytes']/1e6:.1f} MB vs "
+            f"int8 {r['snapshot_int8_bytes']/1e6:.1f} MB "
+            f"(ratio {r['compression_ratio']:.2f}x)")
+
+
+def main():
+    narrative = open(os.path.join(ROOT, "tools",
+                                  "experiments_narrative.md")).read()
+    doc = narrative
+    doc = doc.replace("<!--TABLE1-->", table1_md())
+    doc = doc.replace("<!--TABLE2-->", table2_md())
+    doc = doc.replace("<!--PAUSEPATH-->", pause_path_md())
+    doc = doc.replace("<!--THROUGHPUT-->", throughput_md())
+    doc = doc.replace("<!--ROOFLINE_BASELINE-->",
+                      roofline_md("results/dryrun_baseline"))
+    doc = doc.replace("<!--ROOFLINE_OPT-->", roofline_md("results/dryrun"))
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(doc)
+    print("wrote EXPERIMENTS.md", len(doc), "bytes")
+
+
+if __name__ == "__main__":
+    main()
