@@ -1,0 +1,65 @@
+"""Version-compatibility shims for the installed jax.
+
+The repo targets the modern jax API surface (``jax.shard_map``,
+``jax.tree_util.keystr(..., simple=True, separator=...)``); older releases
+(0.4.x) spell both differently. Import from here instead of jax directly:
+
+    from repro.compat import keystr, shard_map
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["axis_size", "keystr", "shard_map"]
+
+
+def axis_size(axis: str) -> int:
+    """``jax.lax.axis_size`` (jax >= 0.5); psum-of-1 constant-folds to the
+    static axis size on older releases."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def _simple_key(k) -> str:
+    # DictKey(.key) / SequenceKey(.idx) / GetAttrKey(.name) / FlattenedIndexKey
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def keystr(path, *, simple: bool = True, separator: str = "/") -> str:
+    """``jax.tree_util.keystr(path, simple=..., separator=...)`` everywhere.
+
+    jax < 0.5 only accepts the bare ``keystr(keys)`` form; reproduce the
+    simple/separator behaviour by hand there.
+    """
+    try:
+        return jax.tree_util.keystr(path, simple=simple, separator=separator)
+    except TypeError:
+        pass
+    if not simple:
+        return jax.tree_util.keystr(path)
+    return separator.join(_simple_key(k) for k in path)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict: jax < 0.5 returns a
+    one-element list of per-device dicts, newer jax returns the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+try:
+    from jax import shard_map  # jax >= 0.5 (check_vma spelling)
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        """Adapter: old experimental shard_map spells ``check_vma`` as
+        ``check_rep`` and is positional-friendly."""
+        return _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)

@@ -252,6 +252,9 @@ class RunConfig:
     kernel_backend: str = "reference"   # reference | pallas | auto
     microbatch: int = 1                 # grad-accum microbatches
     seed: int = 0
+    # VF placement policy the SVFFManager's scheduler uses for this tenant
+    # (see core/scheduler.py): first_fit | best_fit | fair_share
+    placement: str = "first_fit"
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)

@@ -10,15 +10,18 @@ from repro.core.pause import PauseError, pause_vf, unpause_vf
 from repro.core.pool import DevicePool, PoolError
 from repro.core.qmp import ControlPlane
 from repro.core.records import RecordStore
+from repro.core.scheduler import (AdmissionError, PlacementRequest,
+                                  Scheduler, make_scheduler, POLICY_NAMES)
 from repro.core.snapshot import ConfigSpaceSnapshot
 from repro.core.staging import StagingEngine, TransferStats
 from repro.core.tenant import DevicePausedError, Tenant
 from repro.core.vf import VFState, VFTransitionError, VirtualFunction
 
 __all__ = [
-    "ConfigSpaceSnapshot", "ControlPlane", "DevicePausedError", "DevicePool",
-    "HeartbeatMonitor", "PauseError", "PoolError", "RecordStore",
-    "SVFFManager", "StagingEngine", "Supervisor", "Tenant", "TransferStats",
-    "VFState", "VFTransitionError", "VirtualFunction", "pause_vf",
-    "unpause_vf",
+    "AdmissionError", "ConfigSpaceSnapshot", "ControlPlane",
+    "DevicePausedError", "DevicePool", "HeartbeatMonitor", "PauseError",
+    "PlacementRequest", "PoolError", "POLICY_NAMES", "RecordStore",
+    "SVFFManager", "Scheduler", "StagingEngine", "Supervisor", "Tenant",
+    "TransferStats", "VFState", "VFTransitionError", "VirtualFunction",
+    "make_scheduler", "pause_vf", "unpause_vf",
 ]

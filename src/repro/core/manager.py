@@ -30,6 +30,8 @@ from repro.configs.base import RunConfig
 from repro.core.pool import DevicePool, PoolError
 from repro.core.pause import PhaseTimings, pause_vf, unpause_vf
 from repro.core.records import RecordStore
+from repro.core.scheduler import (PlacementRequest, Scheduler,
+                                  make_scheduler)
 from repro.core.snapshot import ConfigSpaceSnapshot
 from repro.core.staging import StagingEngine
 from repro.core.tenant import Tenant
@@ -41,7 +43,8 @@ class SVFFManager:
     def __init__(self, pool: DevicePool, *,
                  staging: Optional[StagingEngine] = None,
                  workdir: str = "/tmp/svff",
-                 pause_enabled: bool = True):
+                 pause_enabled: bool = True,
+                 scheduler: "Scheduler | str | None" = None):
         self.pool = pool
         self.staging = staging or StagingEngine()
         self.pause_enabled = pause_enabled
@@ -50,20 +53,43 @@ class SVFFManager:
         self.tenants: dict[str, Tenant] = {}
         self.snapshots: dict[str, ConfigSpaceSnapshot] = {}   # RAM (paused)
         self._detach_counter = 0
+        if isinstance(scheduler, str):
+            scheduler = make_scheduler(scheduler)
+        # None -> resolve per attach from the tenant's RunConfig.placement
+        self.scheduler: Optional[Scheduler] = scheduler
 
     # ------------------------------------------------------------------ attach
-    def _free_vf(self) -> VirtualFunction:
-        for vf in self.pool.vfs.values():
-            if vf.state == VFState.DETACHED:
-                return vf
-        raise PoolError("no free VF (increase num_vfs via reconf)")
+    def _scheduler_for(self, tenant: Tenant) -> Scheduler:
+        if self.scheduler is not None:
+            return self.scheduler
+        return make_scheduler(getattr(tenant.run, "placement", "first_fit"))
+
+    def _free_vf(self, tenant: Tenant) -> VirtualFunction:
+        """Placement-policy delegation (was: first detached VF scan)."""
+        sched = self._scheduler_for(tenant)
+        return sched.select(self.pool, self.tenants,
+                            PlacementRequest(tenant_id=tenant.tid))
 
     def attach(self, tenant: Tenant, vf_id: Optional[str] = None,
                state=None) -> PhaseTimings:
         """Full attach path: record validation + bind + record write."""
         t = PhaseTimings()
         t0 = time.perf_counter()
-        vf = self.pool.find(vf_id) if vf_id else self._free_vf()
+        sched = self._scheduler_for(tenant)
+        req = PlacementRequest(tenant_id=tenant.tid)
+        if vf_id:
+            # explicit placement still goes through admission control —
+            # e.g. a double attach must not leak the tenant's current VF
+            sched.admit(self.pool, self.tenants, req)
+            vf = self.pool.find(vf_id)
+        else:
+            vf = sched.select(self.pool, self.tenants, req)
+        if vf.state != VFState.DETACHED:
+            # validate BEFORE any mutation: a late VFTransitionError would
+            # leave owner/tenant state half-updated
+            raise PoolError(
+                f"cannot attach {tenant.tid}: {vf.vf_id} is "
+                f"{vf.state.value}, not detached")
         try:   # attach re-validates any existing record (QDMA-manager checks)
             self.records.validate(tenant.tid, self.pool)
         except Exception:
@@ -71,17 +97,17 @@ class SVFFManager:
         t.add("validate", time.perf_counter() - t0)
 
         t0 = time.perf_counter()
-        if state is None and tenant.tid in self._detached_steps():
-            # restore from the disk snapshot the detach wrote
+        if state is None:
             store = CheckpointStore(self.detach_store_dir)
-            step = self._detached_steps()[tenant.tid]
-            rules = tenant._make_rules(vf)
-            shardings = tenant.state_shardings(rules)
-            from repro.train.step import train_state_shapes
-            like = train_state_shapes(tenant.run)
-            state = store.restore(step, like, shardings)
-            meta = store.metadata(step)
-            tenant.steps_done = meta.get("steps_done", tenant.steps_done)
+            step = self._detached_steps(store).get(tenant.tid)
+            if step is not None:
+                # restore from the disk snapshot the detach wrote
+                shardings = tenant.shardings_for(vf)
+                like = tenant.state_template()
+                state = store.restore(step, like, shardings)
+                meta = store.metadata(step)
+                tenant.steps_done = meta.get("steps_done",
+                                             tenant.steps_done)
         compile_s = tenant.bind(vf, state=state)
         vf.owner = tenant.tid
         vf.transition(VFState.ATTACHED)
@@ -94,9 +120,10 @@ class SVFFManager:
         t.add("record", time.perf_counter() - t0)
         return t
 
-    def _detached_steps(self) -> dict:
+    def _detached_steps(self, store: Optional[CheckpointStore] = None
+                        ) -> dict:
         """tenant_id -> checkpoint step for disk-parked detach snapshots."""
-        store = CheckpointStore(self.detach_store_dir)
+        store = store or CheckpointStore(self.detach_store_dir)
         out = {}
         for s in store.steps():
             meta = store.metadata(s)
@@ -109,6 +136,12 @@ class SVFFManager:
         The guest loses the device (tenant.status = detached)."""
         t = PhaseTimings()
         vf = self.pool.find(tenant.vf_id)
+        if vf.state != VFState.ATTACHED or vf.owner != tenant.tid:
+            # validate BEFORE the disk snapshot / unbind: detaching e.g. a
+            # PAUSED VF must fail atomically (paper: unpause first)
+            raise PoolError(
+                f"cannot detach {tenant.tid}: {vf.vf_id} is "
+                f"{vf.state.value} (owner {vf.owner})")
         t0 = time.perf_counter()
         state = tenant.export_state()
         payload = self.staging.save(state)
@@ -145,12 +178,16 @@ class SVFFManager:
 
     def unpause(self, tenant: Tenant, vf_id: Optional[str] = None,
                 num_devices: Optional[int] = None) -> PhaseTimings:
-        snap = self.snapshots.pop(tenant.tid)
+        # the RAM snapshot is the paused tenant's ONLY state copy — drop
+        # it only after the unpause fully succeeded, so a failed unpause
+        # (bad vf_id, no free devices) stays retryable
+        snap = self.snapshots[tenant.tid]
         vf = (self.pool.find(vf_id) if vf_id
               else self.pool.find(tenant.vf_id))
         t = unpause_vf(self.pool, vf, tenant, snap, self.staging,
                        num_devices=num_devices)
         vf.owner = tenant.tid
+        del self.snapshots[tenant.tid]
         return t
 
     # ------------------------------------------------------------------ init
@@ -238,4 +275,6 @@ class SVFFManager:
                 "tenants": {t.tid: t.query() for t in self.tenants.values()},
                 "paused_snapshots": {k: v.describe()
                                      for k, v in self.snapshots.items()},
-                "pause_enabled": self.pause_enabled}
+                "pause_enabled": self.pause_enabled,
+                "scheduler": (self.scheduler.describe() if self.scheduler
+                              else {"policy": "per-tenant"})}

@@ -30,7 +30,6 @@ from repro.core.snapshot import ConfigSpaceSnapshot, serialize_specs
 from repro.core.staging import StagingEngine
 from repro.core.tenant import Tenant
 from repro.core.vf import VFState, VirtualFunction
-from repro.train.step import train_state_specs
 
 
 @dataclasses.dataclass
@@ -62,7 +61,7 @@ def pause_vf(pool: DevicePool, vf: VirtualFunction, tenant: Tenant,
     t0 = time.perf_counter()
     state = tenant.export_state()
     payload = staging.save(state)
-    specs = train_state_specs(tenant.run, tenant._rules)
+    specs = tenant.export_specs()
     snap = ConfigSpaceSnapshot(
         tenant_id=tenant.tid, steps_done=tenant.steps_done, payload=payload,
         sharding_desc=serialize_specs(specs),
@@ -103,8 +102,7 @@ def unpause_vf(pool: DevicePool, vf: VirtualFunction, tenant: Tenant,
     if not vf.devices:
         import math
         pool.allocate(vf, num_devices or math.prod(snap.mesh_shape))
-    rules = tenant._make_rules(vf)
-    shardings = tenant.state_shardings(rules)
+    shardings = tenant.shardings_for(vf)
     state = staging.restore(snap.payload, shardings)
     jax.block_until_ready(state)
     vf.transition(VFState.ATTACHED)

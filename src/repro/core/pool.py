@@ -52,9 +52,12 @@ class DevicePool:
         if self._devices is None:
             self._devices = tuple(jax.devices())
         # validation sweep: confirm every device answers (a cheap put/get,
-        # like reading the vendor id of each function on the bus)
+        # like reading the vendor id of each function on the bus).
+        # Simulated pools (repro.sim) hold plain tokens, which have no bus
+        # to probe — only real jax devices get the put/get.
         for d in self._devices:
-            jax.device_put(0, d).block_until_ready()
+            if isinstance(d, jax.Device):
+                jax.device_put(0, d).block_until_ready()
         self._rescanned = True
         self.last_rescan_s = time.perf_counter() - t0
         return len(self._devices)

@@ -58,6 +58,20 @@ class Tenant:
         specs = train_state_specs(self.run, rules)
         return rules.named(specs)
 
+    # -- manager/pause protocol (duck-typed; repro.sim substitutes these) ----
+    def shardings_for(self, vf: VirtualFunction):
+        """Target shardings for placing this tenant's state on ``vf``."""
+        return self.state_shardings(self._make_rules(vf))
+
+    def state_template(self):
+        """Shape-only pytree matching export_state (checkpoint restore)."""
+        from repro.train.step import train_state_shapes
+        return train_state_shapes(self.run)
+
+    def export_specs(self):
+        """PartitionSpec tree of the current layout (config-space save)."""
+        return train_state_specs(self.run, self._rules)
+
     # --------------------------------------------------------------- lifecycle
     def bind(self, vf: VirtualFunction, state=None, *,
              flash: bool = True) -> float:

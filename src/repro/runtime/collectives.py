@@ -19,8 +19,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import axis_size, shard_map
 
 
 def _pack(x, block):
@@ -39,7 +40,7 @@ def compressed_psum_mean(x: jax.Array, axis: str, *, block: int = 256):
     Call INSIDE shard_map. x: any shape; flattened internally to
     (n_dev, -1) rows padded to a block multiple.
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     flat = x.astype(jnp.float32).reshape(-1)
     per = -(-flat.size // n)                    # ceil
     per = -(-per // block) * block              # block multiple

@@ -17,8 +17,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def bubble_fraction(num_microbatches: int, num_stages: int) -> float:

@@ -1,0 +1,50 @@
+"""repro.sim — deterministic scenario simulation for the SVFF core.
+
+The paper claims pause-based reconfiguration is transparent to live
+tenants across ARBITRARY sequences of management operations (§IV, Tables
+I/II). Hand-written tests cover a handful of sequences; this package
+checks the claim property-style over thousands of randomized histories,
+driving the REAL ``SVFFManager`` / ``DevicePool`` / scheduler / pause /
+staging / records / checkpoint code with lightweight ``SimTenant``s and
+simulated device tokens.
+
+Pieces
+------
+  clock       ``VirtualClock`` — deterministic virtual time + event log
+  scenario    the op DSL (``Op``) and the seeded generator
+              (``generate_scenario``): same seed -> same op sequence
+  tenant      ``SimTenant`` — numpy-state tenant whose state is a pure
+              function of ``(seed, steps_done)``
+  invariants  ``check_invariants`` (I1-I5) + ``check_timings`` (I6),
+              asserted after every op — see its docstring for the list
+  harness     ``ScenarioRunner`` / ``run_scenario`` — executes a scenario,
+              records per-op outcomes (ok / atomically rejected) and the
+              Table-II timing dict of every reconf
+
+Reproducing a failure
+---------------------
+Every ``InvariantViolation`` message carries ``seed=<s> policy=<p>
+op#<i>``. Replay it exactly with:
+
+    from repro.sim import ScenarioConfig, ScenarioRunner
+    ScenarioRunner(ScenarioConfig(seed=<s>, policy="<p>")).run()
+
+``ScenarioResult.fingerprint()`` digests the whole outcome (per-op status
++ final tenant states); two runs of one seed always match, which the
+tests assert. See also ``src/repro/sim/README.md``.
+"""
+from repro.sim.clock import VirtualClock
+from repro.sim.harness import (OpResult, ScenarioResult, ScenarioRunner,
+                               run_scenario)
+from repro.sim.invariants import (InvariantViolation, check_invariants,
+                                  check_timings)
+from repro.sim.scenario import (Op, OP_KINDS, ScenarioConfig,
+                                generate_scenario)
+from repro.sim.tenant import SimTenant
+
+__all__ = [
+    "InvariantViolation", "Op", "OP_KINDS", "OpResult", "ScenarioConfig",
+    "ScenarioResult", "ScenarioRunner", "SimTenant", "VirtualClock",
+    "check_invariants", "check_timings", "generate_scenario",
+    "run_scenario",
+]

@@ -1,0 +1,212 @@
+"""ScenarioRunner — executes a generated scenario against the real stack.
+
+One runner = one scenario = one fresh ``DevicePool`` (simulated device
+tokens), ``SVFFManager`` (with the configured placement policy), real
+``StagingEngine`` / ``RecordStore`` / ``CheckpointStore`` on a throwaway
+workdir, and ``SimTenant``s. After EVERY op — successful or rejected —
+``check_invariants`` runs; any violation raises ``InvariantViolation``
+tagged ``seed=<s> op#<i>``, which reproduces the failure exactly:
+
+    ScenarioRunner(ScenarioConfig(seed=<s>, policy=<p>)).run()
+
+Expected rejections (admission failures, illegal transitions, I/O on a
+paused device, ...) are recorded per-op — never exceptions — because the
+property under test is that a rejected op is ATOMIC: the system state it
+leaves behind still satisfies every invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import shutil
+import tempfile
+import time
+import zlib
+from typing import Optional
+
+from repro.core.fault import Supervisor
+from repro.core.manager import SVFFManager
+from repro.core.pool import DevicePool, PoolError
+from repro.core.pause import PauseError
+from repro.core.records import RecordError
+from repro.core.staging import StagingEngine
+from repro.core.tenant import DevicePausedError
+from repro.core.vf import VFTransitionError
+from repro.sim.clock import VirtualClock
+from repro.sim.invariants import (InvariantViolation, check_invariants,
+                                  check_timings)
+from repro.sim.scenario import Op, ScenarioConfig, generate_scenario
+from repro.sim.tenant import SimTenant
+
+#: exception types an op may legally be rejected with (atomically)
+REJECTIONS = (PoolError, PauseError, VFTransitionError, DevicePausedError,
+              RecordError, KeyError)
+
+
+@dataclasses.dataclass
+class OpResult:
+    op: Op
+    status: str                 # ok | rejected
+    error: Optional[str] = None
+    virtual_t: float = 0.0
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    config: ScenarioConfig
+    ops: list[OpResult]
+    reconf_timings: list[dict]
+    wall_seconds: float
+    virtual_seconds: float
+    final: dict
+
+    @property
+    def num_ok(self) -> int:
+        return sum(1 for r in self.ops if r.status == "ok")
+
+    @property
+    def num_rejected(self) -> int:
+        return sum(1 for r in self.ops if r.status == "rejected")
+
+    def fingerprint(self) -> str:
+        """Digest of the full outcome — equal across replays of a seed."""
+        parts = []
+        for r in self.ops:
+            parts.append(f"{r.op.kind}:{r.op.tenant}:{r.status}")
+        for tid in sorted(self.final["tenants"]):
+            q = self.final["tenants"][tid]
+            parts.append(f"{tid}={q['status']}@{q['steps_done']}")
+        return f"{zlib.crc32('|'.join(parts).encode()):08x}"
+
+
+class ScenarioRunner:
+    def __init__(self, cfg: ScenarioConfig, workdir: Optional[str] = None):
+        self.cfg = cfg
+        self.workdir = workdir
+        self.clock = VirtualClock()
+        self.mgr: Optional[SVFFManager] = None
+        self.sup: Optional[Supervisor] = None
+        self.tenants: dict[str, SimTenant] = {}
+        self.expected_steps: dict[str, int] = {}
+
+    # ----------------------------------------------------------------- ops
+    def _tenant(self, tid: str) -> SimTenant:
+        if tid not in self.tenants:
+            self.tenants[tid] = SimTenant(
+                tid, seed=self.cfg.seed * 1009 + len(self.tenants),
+                leaf_size=self.cfg.leaf_size, clock=self.clock,
+                placement=self.cfg.policy)
+            self.expected_steps[tid] = 0
+        return self.tenants[tid]
+
+    def _apply(self, op: Op) -> Optional[dict]:
+        mgr, clock = self.mgr, self.clock
+        if op.kind == "init":
+            devices = tuple(f"simdev{i}"
+                            for i in range(self.cfg.num_devices))
+            pool = DevicePool(devices=devices, max_vfs=self.cfg.max_vfs)
+            self.mgr = SVFFManager(pool, workdir=self._wd,
+                                   staging=StagingEngine(num_queues=2),
+                                   scheduler=self.cfg.policy)
+            self.sup = Supervisor(self.mgr)
+            tns = [self._tenant(f"vm{i}") for i in range(op.num_tenants)]
+            self.mgr.init(op.num_vfs, tns,
+                          devices_per_vf=op.devices_per_vf)
+            clock.advance(0.05)                 # rescan + partition cost
+            return None
+        assert mgr is not None, "scenario must start with init"
+        if op.kind == "attach":
+            mgr.attach(self._tenant(op.tenant))
+        elif op.kind == "detach":
+            mgr.detach(self._tenant(op.tenant))
+            clock.advance(0.02)
+        elif op.kind == "pause":
+            mgr.pause(self._tenant(op.tenant))
+            clock.advance(0.01)
+        elif op.kind == "unpause":
+            mgr.unpause(self._tenant(op.tenant))
+            clock.advance(0.01)
+        elif op.kind == "reconf":
+            timings = mgr.reconf(op.num_vfs,
+                                 devices_per_vf=op.devices_per_vf)
+            check_timings(timings)
+            clock.advance(0.05)
+            return timings
+        elif op.kind == "migrate":
+            mgr.migrate(self._tenant(op.tenant))
+            clock.advance(0.02)
+        elif op.kind == "fault":
+            tn = self._tenant(op.tenant)
+            tn.inject_failure()
+            pre_running = {t for t, tn2 in self.tenants.items()
+                           if tn2.status == "running" and t in mgr.tenants}
+            self.sup.run_round(1)
+            # every healthy running tenant advanced one step; the faulted
+            # one raised before stepping and was migrated with its state
+            for t in pre_running:
+                if t != op.tenant:
+                    self.expected_steps[t] += 1
+            kinds = [e["kind"] for e in self.sup.events[-2:]]
+            if kinds != ["failure", "migrated"]:
+                raise InvariantViolation(
+                    f"fault on {op.tenant} not recovered: {kinds}")
+        elif op.kind == "step":
+            self._tenant(op.tenant).run_steps(op.steps)
+            self.expected_steps[op.tenant] += op.steps
+        else:
+            raise ValueError(f"unknown op {op.kind}")
+        return None
+
+    # ----------------------------------------------------------------- run
+    def run(self) -> ScenarioResult:
+        from repro.core.scheduler import make_scheduler
+        make_scheduler(self.cfg.policy)     # fail fast on a policy typo
+        ops = generate_scenario(self.cfg)
+        self._wd = self.workdir or tempfile.mkdtemp(prefix="svff_sim_")
+        results: list[OpResult] = []
+        reconf_timings: list[dict] = []
+        t0 = time.perf_counter()
+        try:
+            for i, op in enumerate(ops):
+                try:
+                    timings = self._apply(op)
+                    if timings is not None:
+                        reconf_timings.append(timings)
+                    results.append(OpResult(op, "ok",
+                                            virtual_t=self.clock.now()))
+                    self.clock.stamp("ok", op=op.kind, tenant=op.tenant)
+                except REJECTIONS as e:
+                    if op.kind == "init":
+                        raise    # a scenario with no system is no scenario
+                    results.append(OpResult(op, "rejected", error=repr(e),
+                                            virtual_t=self.clock.now()))
+                    self.clock.stamp("rejected", op=op.kind,
+                                     tenant=op.tenant)
+                try:
+                    check_invariants(self.mgr)
+                    self._check_step_counters()
+                except InvariantViolation as e:
+                    raise InvariantViolation(
+                        f"seed={self.cfg.seed} policy={self.cfg.policy} "
+                        f"op#{i} {op}: {e}") from e
+            final = self.mgr.query()
+        finally:
+            if self.workdir is None:
+                shutil.rmtree(self._wd, ignore_errors=True)
+        return ScenarioResult(
+            config=self.cfg, ops=results, reconf_timings=reconf_timings,
+            wall_seconds=time.perf_counter() - t0,
+            virtual_seconds=self.clock.now(), final=final)
+
+    def _check_step_counters(self):
+        for tid, want in self.expected_steps.items():
+            got = self.tenants[tid].steps_done
+            if got != want:
+                raise InvariantViolation(
+                    f"step counter drift for {tid}: {got} != {want}")
+
+
+def run_scenario(seed: int, policy: str = "first_fit",
+                 **kw) -> ScenarioResult:
+    """Convenience: run one seeded scenario, return its result."""
+    return ScenarioRunner(ScenarioConfig(seed=seed, policy=policy,
+                                         **kw)).run()

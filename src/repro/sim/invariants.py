@@ -1,0 +1,144 @@
+"""Invariant checker — asserted after EVERY op of every scenario.
+
+  I1  exclusive ownership: a tenant owns at most one VF, a VF at most one
+      tenant, and device sets of device-holding VFs are pairwise disjoint
+      and within-pool (IOMMU isolation; delegates to the pool's own check)
+  I2  state-machine coherence: running tenant <-> ATTACHED VF with
+      devices; paused tenant <-> PAUSED VF holding NO devices, owner kept
+  I3  pause durability: every paused tenant has a config-space snapshot
+      in host RAM whose step counter matches the tenant's, and the
+      snapshot set contains EXACTLY the paused tenants
+  I4  bit-identity: a running SimTenant's state equals
+      ``expected_state(seed, steps_done)`` bit-for-bit — any corruption
+      across pause/unpause/migrate/detach round-trips shows here
+  I5  records <-> pool: the on-disk attach records are exactly the
+      attached-or-paused tenants, and each record names the tenant's VF;
+      detached tenants have a disk snapshot to re-attach from
+  I6  Table-II timing dicts are well-formed: exactly the paper's four
+      macro steps + total, all finite and non-negative, total = sum
+
+Violations raise ``InvariantViolation`` tagged by the caller with the
+scenario seed and op index, which is all that is needed to reproduce.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.vf import VFState
+
+TIMING_KEYS = frozenset({"rescan", "remove_vf", "change_num_vf", "add_vf",
+                         "total"})
+
+
+class InvariantViolation(AssertionError):
+    pass
+
+
+def _fail(msg: str):
+    raise InvariantViolation(msg)
+
+
+def check_invariants(mgr) -> None:
+    pool = mgr.pool
+
+    # -- I1: exclusive ownership / device disjointness -----------------------
+    try:
+        pool._check_invariants()
+    except Exception as e:
+        _fail(f"I1 pool isolation: {e}")
+    owner_of = {}
+    for vf in pool.vfs.values():
+        if vf.owner is not None:
+            if vf.owner in owner_of:
+                _fail(f"I1 tenant {vf.owner} owns both "
+                      f"{owner_of[vf.owner]} and {vf.vf_id}")
+            owner_of[vf.owner] = vf.vf_id
+
+    # -- I2: tenant status <-> VF state --------------------------------------
+    for tid, tn in mgr.tenants.items():
+        if tn.status == "running":
+            if tn.vf_id is None or tn.vf_id not in pool.vfs:
+                _fail(f"I2 running {tid} has no VF ({tn.vf_id})")
+            vf = pool.vfs[tn.vf_id]
+            if vf.state != VFState.ATTACHED or vf.owner != tid:
+                _fail(f"I2 running {tid}: VF {vf.vf_id} is "
+                      f"{vf.state.value}/owner={vf.owner}")
+            if not vf.devices:
+                _fail(f"I2 running {tid}: VF {vf.vf_id} holds no devices")
+        elif tn.status == "paused":
+            vf = pool.vfs.get(tn.vf_id)
+            if vf is None:
+                _fail(f"I2 paused {tid}: VF {tn.vf_id} vanished")
+            if vf.state != VFState.PAUSED or vf.owner != tid:
+                _fail(f"I2 paused {tid}: VF {vf.vf_id} is "
+                      f"{vf.state.value}/owner={vf.owner}")
+            if vf.devices:
+                _fail(f"I2 paused {tid}: VF {vf.vf_id} still holds "
+                      f"{len(vf.devices)} devices")
+        elif tn.status == "detached":
+            if tn.vf_id is not None:
+                _fail(f"I2 detached {tid} still points at {tn.vf_id}")
+
+    # -- I3: snapshots == paused tenants, counters preserved -----------------
+    paused_ids = {tid for tid, tn in mgr.tenants.items()
+                  if tn.status == "paused"}
+    snap_ids = set(mgr.snapshots)
+    if snap_ids != paused_ids:
+        _fail(f"I3 snapshots {sorted(snap_ids)} != paused "
+              f"{sorted(paused_ids)}")
+    for tid in paused_ids:
+        snap = mgr.snapshots[tid]
+        if snap.steps_done != mgr.tenants[tid].steps_done:
+            _fail(f"I3 {tid}: snapshot step {snap.steps_done} != tenant "
+                  f"step {mgr.tenants[tid].steps_done}")
+        if snap.tenant_id != tid:
+            _fail(f"I3 snapshot for {tid} names {snap.tenant_id}")
+
+    # -- I4: bit-identical state (SimTenant only) -----------------------------
+    for tid, tn in mgr.tenants.items():
+        if tn.status != "running" or not hasattr(tn, "expected_now"):
+            continue
+        want = tn.expected_now()
+        got = tn.export_state()
+        import jax
+        wl, gl = jax.tree.leaves(want), jax.tree.leaves(got)
+        if len(wl) != len(gl):
+            _fail(f"I4 {tid}: state tree shape changed")
+        for i, (w, g) in enumerate(zip(wl, gl)):
+            if not np.array_equal(np.asarray(w), np.asarray(g)):
+                _fail(f"I4 {tid}: leaf {i} not bit-identical after "
+                      f"{tn.steps_done} steps")
+
+    # -- I5: records on disk match pool state ---------------------------------
+    attached_ids = {tid for tid, tn in mgr.tenants.items()
+                    if tn.status in ("running", "paused")}
+    rec_ids = set(mgr.records.list())
+    if rec_ids != attached_ids:
+        _fail(f"I5 records {sorted(rec_ids)} != attached "
+              f"{sorted(attached_ids)}")
+    for tid in attached_ids:
+        rec = mgr.records.read(tid)
+        if rec["tenant"] != tid:
+            _fail(f"I5 record file {tid} names {rec['tenant']}")
+        if rec["vf"]["vf_id"] != mgr.tenants[tid].vf_id:
+            _fail(f"I5 {tid}: record VF {rec['vf']['vf_id']} != live "
+                  f"{mgr.tenants[tid].vf_id}")
+    parked = set(mgr._detached_steps())
+    for tid, tn in mgr.tenants.items():
+        if tn.status == "detached" and tid not in parked:
+            _fail(f"I5 detached {tid} has no disk snapshot to re-attach")
+
+
+def check_timings(timings: dict) -> None:
+    """I6 — a reconf's Table-II dict is well-formed."""
+    if set(timings) != TIMING_KEYS:
+        _fail(f"I6 timing keys {sorted(timings)} != "
+              f"{sorted(TIMING_KEYS)}")
+    for k, v in timings.items():
+        if not isinstance(v, float) or not math.isfinite(v) or v < 0:
+            _fail(f"I6 timing {k}={v!r} not a finite non-negative float")
+    body = sum(v for k, v in timings.items() if k != "total")
+    if abs(body - timings["total"]) > 1e-6:
+        _fail(f"I6 total {timings['total']} != sum of steps {body}")

@@ -1,0 +1,175 @@
+"""Scenario DSL + seeded generator.
+
+A *scenario* is a deterministic sequence of ``Op``s derived entirely from
+``ScenarioConfig.seed`` — ``generate_scenario(cfg)`` called twice returns
+identical tuples, so any failing run is reproducible from its seed alone
+(see ``repro.sim`` package docstring).
+
+Op kinds (the paper's management surface + fault injection):
+
+  init     first op always: create the pool, partition into VFs, attach
+           the initial tenants
+  attach   bind a (new or previously detached) tenant via the scheduler
+  detach   standard SR-IOV detach (state parked on disk)
+  pause    SVFF pause (state staged to host RAM, devices released)
+  unpause  restore a paused tenant onto its VF
+  reconf   full reconfiguration cycle (grow or shrink #VF) — returns the
+           Table-II timing dict the invariant checker validates
+  migrate  pause -> reallocate -> unpause (straggler mitigation)
+  fault    inject a device failure, then run a Supervisor round that must
+           recover the tenant via migration (core/fault.py)
+  step     the tenant's own workload advances N steps
+
+The generator keeps a conservative validity model (who is running/paused/
+detached, how many VFs exist) so sequences are mostly executable, and —
+at ``chaos_rate`` — deliberately emits invalid ops (attach with no free
+VF, detach of a paused VF, double pause, ...) to exercise the manager's
+rejection atomicity: a rejected op must leave every invariant intact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Optional
+
+OP_KINDS = ("init", "attach", "detach", "pause", "unpause", "reconf",
+            "migrate", "fault", "step")
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    kind: str
+    tenant: Optional[str] = None
+    num_vfs: Optional[int] = None
+    devices_per_vf: Optional[int] = None
+    num_tenants: Optional[int] = None      # init only
+    steps: int = 1
+    chaos: bool = False                     # expected to be rejected
+
+    def __post_init__(self):
+        assert self.kind in OP_KINDS, self.kind
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    seed: int = 0
+    num_ops: int = 24
+    num_devices: int = 16
+    max_vfs: int = 6
+    max_tenants: int = 5
+    policy: str = "first_fit"
+    leaf_size: int = 16
+    chaos_rate: float = 0.08
+
+
+# weights for the op mix after init (step dominates: tenants mostly work)
+_WEIGHTS = (("step", 30), ("pause", 10), ("unpause", 14), ("reconf", 10),
+            ("attach", 10), ("detach", 6), ("migrate", 7), ("fault", 6))
+
+
+def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
+    rng = random.Random(0x5FF ^ (cfg.seed * 2654435761 % 2**31))
+    ops: list[Op] = []
+
+    nvf = rng.randint(1, min(4, cfg.max_vfs))
+    per = rng.choice([1, 2]) if cfg.num_devices >= 4 * nvf else 1
+    m = rng.randint(1, nvf)
+    ops.append(Op("init", num_vfs=nvf, devices_per_vf=per, num_tenants=m))
+
+    # validity model
+    running = [f"vm{i}" for i in range(m)]
+    paused: list[str] = []
+    detached: list[str] = []
+    next_id = m
+    total_vfs = nvf          # conservative lower bound (see sim README)
+
+    def tenant_count():
+        return len(running) + len(paused) + len(detached) + 0
+
+    while len(ops) < cfg.num_ops:
+        if rng.random() < cfg.chaos_rate:
+            op = _chaos_op(rng, running, paused, detached, next_id)
+            if op is not None:
+                ops.append(op)
+                continue
+        kind = _weighted(rng)
+        if kind == "step" and running:
+            ops.append(Op("step", tenant=rng.choice(sorted(running)),
+                          steps=rng.randint(1, 3)))
+        elif kind == "pause" and running:
+            t = rng.choice(sorted(running))
+            running.remove(t); paused.append(t)
+            ops.append(Op("pause", tenant=t))
+        elif kind == "unpause" and paused:
+            t = rng.choice(sorted(paused))
+            paused.remove(t); running.append(t)
+            ops.append(Op("unpause", tenant=t))
+        elif kind == "reconf":
+            occupied = len(running) + len(paused)
+            lo = 1
+            hi = cfg.max_vfs
+            n = rng.randint(lo, hi)
+            # budget so survivors + creations + later unpauses always fit
+            p = 1 if cfg.num_devices < 2 * (n + occupied) else \
+                rng.choice([1, 2])
+            if p * (n + occupied) > cfg.num_devices:
+                p = 1
+            if n + 0 < len(running):         # keep every live tenant placeable
+                n = len(running) or 1
+            ops.append(Op("reconf", num_vfs=n, devices_per_vf=p))
+            total_vfs = max(n, occupied)
+        elif kind == "attach":
+            free = total_vfs - len(running) - len(paused)
+            if free <= 0:
+                continue
+            if detached and rng.random() < 0.5:
+                t = rng.choice(sorted(detached))
+                detached.remove(t)
+            elif tenant_count() < cfg.max_tenants:
+                t = f"vm{next_id}"; next_id += 1
+            else:
+                continue
+            running.append(t)
+            ops.append(Op("attach", tenant=t))
+        elif kind == "detach" and running:
+            t = rng.choice(sorted(running))
+            running.remove(t); detached.append(t)
+            ops.append(Op("detach", tenant=t))
+        elif kind == "migrate" and running:
+            ops.append(Op("migrate", tenant=rng.choice(sorted(running))))
+        elif kind == "fault" and running:
+            ops.append(Op("fault", tenant=rng.choice(sorted(running))))
+    return tuple(ops)
+
+
+def _weighted(rng: random.Random) -> str:
+    total = sum(w for _, w in _WEIGHTS)
+    x = rng.randrange(total)
+    for kind, w in _WEIGHTS:
+        if x < w:
+            return kind
+        x -= w
+    return "step"
+
+
+def _chaos_op(rng, running, paused, detached, next_id) -> Optional[Op]:
+    """An op the manager must REJECT without corrupting state."""
+    choices = []
+    if paused:
+        choices += [Op("detach", tenant=rng.choice(sorted(paused)),
+                       chaos=True),            # paused VF can't detach
+                    Op("pause", tenant=rng.choice(sorted(paused)),
+                       chaos=True),            # double pause
+                    Op("step", tenant=rng.choice(sorted(paused)),
+                       chaos=True)]            # I/O while paused
+    if running:
+        choices += [Op("unpause", tenant=rng.choice(sorted(running)),
+                       chaos=True),            # not paused
+                    Op("attach", tenant=rng.choice(sorted(running)),
+                       chaos=True)]            # already attached
+    if detached:
+        choices += [Op("pause", tenant=rng.choice(sorted(detached)),
+                       chaos=True)]            # no VF to pause
+    if not choices:
+        return None
+    return rng.choice(choices)

@@ -1,0 +1,175 @@
+"""SimTenant — a lightweight tenant that drives the REAL manager stack.
+
+The production ``Tenant`` binds jax meshes and compiled executables, which
+makes thousands-of-scenarios property testing impossible (and pointless:
+the numerics are covered by the tier-1 tests). ``SimTenant`` implements
+the same duck-typed protocol ``SVFFManager`` / ``core.pause`` /
+``core.fault`` consume — ``bind``/``suspend``/``resume``/``detach``/
+``export_state``/``export_specs``/``shardings_for``/``state_template``/
+``run_steps``/``inject_failure`` — over small numpy pytrees, so every
+scenario exercises the real pool, scheduler, pause, staging, records and
+checkpoint code paths.
+
+The crucial property: a SimTenant's state is a PURE FUNCTION of
+``(seed, steps_done)`` — ``expected_state(seed, k)`` recomputes it from
+scratch. The invariant checker uses this to assert bit-identity after any
+pause/unpause/migrate/detach round-trip without shadow bookkeeping.
+"""
+from __future__ import annotations
+
+import types
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.tenant import DevicePausedError
+from repro.core.vf import VirtualFunction
+from repro.sim.clock import VirtualClock
+
+_LEAVES = ("w0", "w1")        # params leaves
+_OPT = ("mu",)                # optimizer leaves
+
+
+def _tree_shapes(leaf_size: int) -> dict:
+    return {"params": {k: (leaf_size,) for k in _LEAVES},
+            "opt": {k: (leaf_size,) for k in _OPT}}
+
+
+class SimTenant:
+    #: virtual seconds per op, mirroring Table-II's cost asymmetry
+    STEP_COST = 1e-3
+    COMPILE_COST = 0.25       # "flash the bitstream" on a new slice
+
+    def __init__(self, tid: str, seed: int = 0, *, leaf_size: int = 16,
+                 clock: Optional[VirtualClock] = None,
+                 placement: str = "first_fit"):
+        self.tid = tid
+        self.seed = int(seed)
+        self.leaf_size = int(leaf_size)
+        self.clock = clock
+        self.status = "created"        # created|running|paused|detached
+        self.vf_id: Optional[str] = None
+        self.steps_done = 0
+        self.workload = "sim"
+        self._state = None
+        self._exec_cache: dict = {}
+        self.step_times: list[float] = []
+        self._fail_next = False
+        # what SVFFManager reads off tenant.run
+        self.run = types.SimpleNamespace(
+            model=types.SimpleNamespace(name=f"sim-{tid}"),
+            placement=placement, seed=self.seed)
+
+    # ------------------------------------------------------- deterministic state
+    @staticmethod
+    def _base(seed: int, leaf_size: int) -> dict:
+        shapes = _tree_shapes(leaf_size)
+        out = {"params": {}, "opt": {}}
+        for grp in ("params", "opt"):
+            for i, (k, shp) in enumerate(sorted(shapes[grp].items())):
+                rng = np.random.default_rng([7001, seed, i, grp == "opt"])
+                out[grp][k] = rng.standard_normal(shp).astype(np.float32)
+        return out
+
+    @staticmethod
+    def _delta(seed: int, step: int, leaf_size: int) -> dict:
+        shapes = _tree_shapes(leaf_size)
+        out = {"params": {}, "opt": {}}
+        for grp in ("params", "opt"):
+            for i, (k, shp) in enumerate(sorted(shapes[grp].items())):
+                rng = np.random.default_rng(
+                    [7002, seed, step, i, grp == "opt"])
+                out[grp][k] = (rng.standard_normal(shp) * 1e-2
+                               ).astype(np.float32)
+        return out
+
+    @classmethod
+    def expected_state(cls, seed: int, steps: int,
+                       leaf_size: int = 16) -> dict:
+        """Recompute the exact state after ``steps`` update steps."""
+        state = cls._base(seed, leaf_size)
+        for k in range(steps):
+            d = cls._delta(seed, k, leaf_size)
+            state = jax.tree.map(lambda a, b: a + b, state, d)
+        return state
+
+    def expected_now(self) -> dict:
+        return self.expected_state(self.seed, self.steps_done,
+                                   self.leaf_size)
+
+    # ------------------------------------------------------------- protocol
+    def bind(self, vf: VirtualFunction, state=None, *,
+             flash: bool = True) -> float:
+        if state is not None:
+            self._state = jax.tree.map(np.asarray, state)
+        elif self._state is None:
+            self._state = self._base(self.seed, self.leaf_size)
+        key = (tuple(vf.mesh_shape), tuple(str(d) for d in vf.devices))
+        compile_s = 0.0
+        if key not in self._exec_cache:
+            self._exec_cache[key] = True
+            compile_s = self.COMPILE_COST
+        if self.clock is not None:
+            self.clock.advance(compile_s)
+        self._active_key = key
+        self.vf_id = vf.vf_id
+        self.status = "running"
+        vf.emulated.update({"tenant": self.tid, "status": "running",
+                            "steps_done": self.steps_done})
+        return compile_s
+
+    def run_steps(self, n: int = 1) -> dict:
+        if self.status == "paused":
+            raise DevicePausedError(
+                f"{self.tid}: device {self.vf_id} is paused")
+        if self.status != "running":
+            raise RuntimeError(f"{self.tid}: no device attached")
+        if self._fail_next:
+            self._fail_next = False
+            raise RuntimeError(f"{self.tid}: injected device failure")
+        for _ in range(n):
+            d = self._delta(self.seed, self.steps_done, self.leaf_size)
+            self._state = jax.tree.map(lambda a, b: a + b, self._state, d)
+            self.steps_done += 1
+            if self.clock is not None:
+                self.clock.advance(self.STEP_COST)
+            self.step_times.append(self.STEP_COST)
+        return {"loss": float(np.abs(self._state["params"]["w0"]).mean())}
+
+    # -- pause plumbing ------------------------------------------------------
+    def export_state(self):
+        return self._state
+
+    def export_specs(self):
+        return {}                      # sim carries no PartitionSpecs
+
+    def shardings_for(self, vf: VirtualFunction):
+        return None                    # staging places on default device
+
+    def state_template(self):
+        return jax.tree.map(np.zeros_like,
+                            self._base(self.seed, self.leaf_size))
+
+    def suspend(self):
+        self._state = None
+        self.status = "paused"
+
+    def resume(self, state, vf: VirtualFunction):
+        self.status = "running"
+        self.bind(vf, state=state)
+
+    def detach(self):
+        self._state = None
+        self.vf_id = None
+        self.status = "detached"
+
+    # -- introspection -------------------------------------------------------
+    def query(self) -> dict:
+        return {"tenant": self.tid, "status": self.status,
+                "vf": self.vf_id, "steps_done": self.steps_done,
+                "workload": self.workload,
+                "exec_keys": [list(map(str, k)) for k in self._exec_cache]}
+
+    def inject_failure(self):
+        self._fail_next = True

@@ -1,0 +1,78 @@
+"""Deterministic micro-fallback for `hypothesis` (see conftest.py).
+
+The real dependency is declared in pyproject's test extra; containers
+without it still run tests/test_properties.py through this shim, which
+implements ONLY what those tests use: ``given`` with keyword strategies,
+``settings(max_examples=..., deadline=...)`` as a decorator, and the
+``integers`` / ``sampled_from`` strategies. Example draws are seeded per
+test name, so runs are deterministic; a failing draw reports its
+falsifying example like hypothesis would (without shrinking).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda r: items[r.randrange(len(items))])
+
+
+class settings:
+    def __init__(self, max_examples: int = 100, deadline=None, **_):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._mh_settings = self
+        return fn
+
+
+def given(**strategies):
+    def deco(fn):
+        cfg = getattr(fn, "_mh_settings", settings())
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for _ in range(cfg.max_examples):
+                vals = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **vals, **kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__name__}): "
+                        f"{vals}") from e
+
+        # strategy params are filled here, not by pytest fixtures — hide
+        # the wrapped signature from collection
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def install():
+    """Register this shim as the `hypothesis` package in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.sampled_from = sampled_from
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -1,9 +1,20 @@
 import os
+import sys
 
 # Tests must see the real (single) CPU device — the 512-device override is
 # strictly dryrun.py-local. Some tests spawn subprocesses that set their own
 # XLA_FLAGS (multi-device pool tests).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# hypothesis is a declared test dependency (pyproject [test] extra), but
+# hermetic containers may lack it — fall back to the deterministic shim so
+# tests/test_properties.py still collects and runs.
+sys.path.insert(0, os.path.dirname(__file__))
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _minihypothesis
+    _minihypothesis.install()
 
 import jax  # noqa: E402
 

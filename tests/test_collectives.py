@@ -48,3 +48,42 @@ print(json.dumps(rel))
     assert rel["tiny"] < 1e-6                 # exact pmean path
     assert rel["big"] < 0.02                  # one int8 quantization step
     assert rel["scaled"] < 0.02               # scale-invariant (blockwise)
+
+
+@pytest.mark.slow
+def test_compressed_allreduce_error_is_one_quantization_step():
+    """Regression pin: the gather phase quantizes each value exactly ONCE
+    (the reduce-scatter stays fp32-exact), so the relative error of the
+    compressed leaves is bounded by half an int8 step of the block max —
+    0.5/127 ~= 0.00394 — and does NOT accumulate over the 8 devices (a
+    regression to naive quantized-ring accumulation would be ~8x)."""
+    prog = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.runtime.collectives import compressed_grad_allreduce
+
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(7)
+rel = {}
+for name, scale in (("unit", 1.0), ("small", 1e-5), ("large", 1e4)):
+    g = {"x": jnp.asarray(rng.standard_normal((8, 16, 512)) * scale,
+                          jnp.float32)}
+    want = np.asarray(g["x"]).mean(0)
+    got = np.asarray(jax.jit(
+        lambda t: compressed_grad_allreduce(t, mesh))(g)["x"])
+    rel[name] = float(np.abs(got - want).max()
+                      / (np.abs(want).max() + 1e-12))
+print(json.dumps(rel))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rel = json.loads(out.stdout.strip().splitlines()[-1])
+    bound = 0.5 / 127 * 1.15        # half-step + fp/blockmax headroom
+    for name, r in rel.items():
+        assert r < bound, (name, r, bound)

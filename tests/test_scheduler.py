@@ -1,0 +1,118 @@
+"""Scheduler subsystem: placement policies, admission control, and the
+manager/RunConfig policy-selection knob."""
+import types
+
+import pytest
+
+from repro.configs import make_run_config
+from repro.core import (AdmissionError, DevicePool, PlacementRequest,
+                        POLICY_NAMES, SVFFManager, StagingEngine,
+                        VFState, VirtualFunction, make_scheduler)
+from repro.sim import SimTenant
+
+
+def make_pool(sizes=(2, 1, 4), occupied_extra=True):
+    """Heterogeneous detached VFs (sizes in PF table order) + optionally
+    one occupied VF so fair-share sees a non-trivial share."""
+    n = sum(sizes) + (1 if occupied_extra else 0)
+    devices = tuple(f"d{i}" for i in range(n))
+    pool = DevicePool(devices=devices)
+    pool._rescanned = True
+    idx = 0
+    for i, s in enumerate(sizes):
+        vf = VirtualFunction(vf_id=f"0000:03:00.{i + 1}")
+        vf.assign_devices(devices[idx:idx + s], (s, 1))
+        idx += s
+        pool.vfs[vf.vf_id] = vf
+    if occupied_extra:
+        vf = VirtualFunction(vf_id="0000:03:00.9")
+        vf.assign_devices(devices[idx:idx + 1], (1, 1))
+        vf.owner = "occupant"
+        vf.transition(VFState.ATTACHED)
+        pool.vfs[vf.vf_id] = vf
+    return pool
+
+
+REQ = PlacementRequest(tenant_id="vmX")
+
+
+# sizes (2, 1, 4), pool of 8 devices, 1 occupied tenant -> share = 4
+def test_first_fit_takes_table_order():
+    vf = make_scheduler("first_fit").select(make_pool(), {}, REQ)
+    assert vf.vf_id == "0000:03:00.1"              # size 2, first
+
+
+def test_best_fit_takes_smallest_sufficient():
+    vf = make_scheduler("best_fit").select(make_pool(), {}, REQ)
+    assert len(vf.devices) == 1                    # the size-1 slice
+    req4 = PlacementRequest(tenant_id="vmX", min_devices=3)
+    vf = make_scheduler("best_fit").select(make_pool(), {}, req4)
+    assert len(vf.devices) == 4
+
+
+def test_fair_share_takes_closest_to_share():
+    vf = make_scheduler("fair_share").select(make_pool(), {}, REQ)
+    assert len(vf.devices) == 4                    # share = 8/(1+1) = 4
+
+
+def test_policies_are_deterministic_and_distinct():
+    picks = {p: make_scheduler(p).select(make_pool(), {}, REQ).vf_id
+             for p in POLICY_NAMES}
+    assert picks == {p: make_scheduler(p).select(make_pool(), {}, REQ).vf_id
+                     for p in POLICY_NAMES}
+    assert len(set(picks.values())) == 3           # all three differ here
+
+
+def test_admission_rejects_without_capacity():
+    pool = make_pool(sizes=(1,), occupied_extra=False)
+    sched = make_scheduler("first_fit")
+    with pytest.raises(AdmissionError):
+        sched.select(pool, {}, PlacementRequest("vmX", min_devices=2))
+    pool.vfs["0000:03:00.1"].owner = "other"
+    pool.vfs["0000:03:00.1"].transition(VFState.ATTACHED)
+    with pytest.raises(AdmissionError):
+        sched.select(pool, {}, REQ)
+
+
+def test_admission_rejects_double_attach():
+    tn = types.SimpleNamespace(status="running", vf_id="0000:03:00.1")
+    with pytest.raises(AdmissionError, match="already holds"):
+        make_scheduler("first_fit").select(
+            make_pool(), {"vmX": tn}, REQ)
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(KeyError):
+        make_scheduler("tightest_fit")
+
+
+# ---------------------------------------------------------------------------
+# manager integration + RunConfig knob
+# ---------------------------------------------------------------------------
+def test_manager_scheduler_knob(tmp_path):
+    pool = make_pool()
+    mgr = SVFFManager(pool, workdir=str(tmp_path), scheduler="best_fit",
+                      staging=StagingEngine(num_queues=1))
+    tn = SimTenant("vm0", seed=0)
+    mgr.attach(tn)
+    assert len(pool.find(tn.vf_id).devices) == 1   # best-fit placement
+    assert mgr.query()["scheduler"] == {"policy": "best_fit"}
+
+
+def test_manager_resolves_policy_from_tenant_run(tmp_path):
+    """scheduler=None -> the per-tenant RunConfig.placement knob wins."""
+    pool = make_pool()
+    mgr = SVFFManager(pool, workdir=str(tmp_path),
+                      staging=StagingEngine(num_queues=1))
+    fair = SimTenant("vm0", seed=0, placement="fair_share")
+    mgr.attach(fair)
+    assert len(pool.find(fair.vf_id).devices) == 4
+    first = SimTenant("vm1", seed=1, placement="first_fit")
+    mgr.attach(first)
+    assert pool.find(first.vf_id).vf_id == "0000:03:00.1"
+
+
+def test_runconfig_placement_field():
+    run = make_run_config("qwen3-0.6b", "train_4k", smoke=True)
+    assert run.placement == "first_fit"
+    assert run.replace(placement="fair_share").placement == "fair_share"

@@ -1,0 +1,188 @@
+"""Scenario-simulation subsystem: determinism of the generator, invariant
+preservation over hundreds of randomized multi-tenant histories (per
+placement policy), rejection atomicity, and checker sensitivity."""
+import pytest
+
+from repro.core import DevicePool, SVFFManager, StagingEngine
+from repro.sim import (InvariantViolation, ScenarioConfig, ScenarioRunner,
+                       SimTenant, VirtualClock, check_invariants,
+                       check_timings, generate_scenario)
+
+POLICIES = ("first_fit", "best_fit", "fair_share")
+SCENARIOS_PER_POLICY = 70        # 3 x 70 = 210 randomized scenarios
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+def test_generator_deterministic():
+    for seed in range(10):
+        cfg = ScenarioConfig(seed=seed)
+        assert generate_scenario(cfg) == generate_scenario(cfg)
+    assert (generate_scenario(ScenarioConfig(seed=1))
+            != generate_scenario(ScenarioConfig(seed=2)))
+
+
+def test_generator_starts_with_init_and_respects_length():
+    for seed in range(10):
+        ops = generate_scenario(ScenarioConfig(seed=seed, num_ops=30))
+        assert ops[0].kind == "init"
+        assert len(ops) == 30
+        assert all(o.kind != "init" for o in ops[1:])
+
+
+def test_replay_fingerprint_stable():
+    """Same seed -> identical per-op outcomes and final tenant states,
+    which is what makes a failing scenario reproducible from its seed."""
+    for seed in (0, 3, 11):
+        a = ScenarioRunner(ScenarioConfig(seed=seed)).run()
+        b = ScenarioRunner(ScenarioConfig(seed=seed)).run()
+        assert a.fingerprint() == b.fingerprint()
+        assert a.virtual_seconds == b.virtual_seconds
+
+
+# ---------------------------------------------------------------------------
+# the main property: invariants hold across randomized histories
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+def test_randomized_scenarios_hold_invariants(policy):
+    """70 seeded scenarios per policy; ScenarioRunner asserts all
+    invariants after every op and raises InvariantViolation otherwise.
+    Valid ops must succeed; only deliberate chaos ops may be rejected
+    (and those must be rejected ATOMICALLY — the post-op invariant check
+    runs either way)."""
+    total_ok = total_rejected = 0
+    for seed in range(SCENARIOS_PER_POLICY):
+        res = ScenarioRunner(ScenarioConfig(seed=seed,
+                                            policy=policy)).run()
+        for r in res.ops:
+            if r.status == "rejected":
+                assert r.op.chaos, (
+                    f"seed={seed} policy={policy}: valid op rejected: "
+                    f"{r.op} -> {r.error}")
+        for t in res.reconf_timings:
+            check_timings(t)
+        total_ok += res.num_ok
+        total_rejected += res.num_rejected
+    assert total_ok > SCENARIOS_PER_POLICY * 10   # scenarios actually ran
+    assert total_rejected > 0                     # chaos ops exercised
+
+
+# ---------------------------------------------------------------------------
+# checker sensitivity: a vacuous checker would pass everything
+# ---------------------------------------------------------------------------
+def _small_system(tmp_path, policy="first_fit"):
+    pool = DevicePool(devices=tuple(f"d{i}" for i in range(8)))
+    mgr = SVFFManager(pool, workdir=str(tmp_path),
+                      staging=StagingEngine(num_queues=1),
+                      scheduler=policy)
+    tn = SimTenant("vm0", seed=0)
+    mgr.init(num_vfs=2, tenants=[tn], devices_per_vf=2)
+    return pool, mgr, tn
+
+
+def test_checker_detects_ownership_corruption(tmp_path):
+    pool, mgr, tn = _small_system(tmp_path)
+    check_invariants(mgr)                         # sane baseline
+    pool.find(tn.vf_id).owner = None
+    with pytest.raises(InvariantViolation, match="I2"):
+        check_invariants(mgr)
+
+
+def test_checker_detects_state_corruption(tmp_path):
+    _, mgr, tn = _small_system(tmp_path)
+    tn.run_steps(2)
+    check_invariants(mgr)
+    tn._state["params"]["w0"] = tn._state["params"]["w0"] + 1.0
+    with pytest.raises(InvariantViolation, match="I4"):
+        check_invariants(mgr)
+
+
+def test_checker_detects_lost_snapshot(tmp_path):
+    _, mgr, tn = _small_system(tmp_path)
+    mgr.pause(tn)
+    check_invariants(mgr)
+    mgr.snapshots.pop(tn.tid)
+    with pytest.raises(InvariantViolation, match="I3"):
+        check_invariants(mgr)
+
+
+def test_checker_detects_record_drift(tmp_path):
+    _, mgr, tn = _small_system(tmp_path)
+    check_invariants(mgr)
+    mgr.records.remove(tn.tid)
+    with pytest.raises(InvariantViolation, match="I5"):
+        check_invariants(mgr)
+
+
+def test_timing_dict_validation():
+    good = {"rescan": 0.1, "remove_vf": 0.0, "change_num_vf": 0.2,
+            "add_vf": 0.3, "total": 0.6}
+    check_timings(good)
+    with pytest.raises(InvariantViolation, match="I6"):
+        check_timings({**good, "extra": 1.0})
+    with pytest.raises(InvariantViolation, match="I6"):
+        check_timings({**good, "rescan": -1.0, "total": -0.5})
+    with pytest.raises(InvariantViolation, match="I6"):
+        check_timings({**good, "total": 99.0})
+
+
+# ---------------------------------------------------------------------------
+# rejection atomicity (direct, not via generator)
+# ---------------------------------------------------------------------------
+def test_rejected_ops_leave_invariants_intact(tmp_path):
+    from repro.core import AdmissionError, PoolError, PauseError
+    pool, mgr, tn = _small_system(tmp_path)
+    other = SimTenant("vm1", seed=1)
+    mgr.attach(other)                              # pool now full
+    with pytest.raises(AdmissionError):            # no free VF
+        mgr.attach(SimTenant("vm2", seed=2))
+    check_invariants(mgr)
+    mgr.pause(tn)
+    with pytest.raises(PoolError):                 # can't detach paused
+        mgr.detach(tn)
+    check_invariants(mgr)
+    with pytest.raises(PauseError):                # double pause
+        mgr.pause(tn)
+    check_invariants(mgr)
+    mgr.unpause(tn)
+    check_invariants(mgr)
+
+
+def test_failed_unpause_keeps_snapshot_retryable(tmp_path):
+    """The RAM snapshot is a paused tenant's only state copy; a failed
+    unpause must not consume it."""
+    from repro.core import PoolError
+    _, mgr, tn = _small_system(tmp_path)
+    mgr.pause(tn)
+    with pytest.raises(PoolError):
+        mgr.unpause(tn, vf_id="0000:03:00.99")     # no such VF
+    check_invariants(mgr)                          # snapshot still held
+    mgr.unpause(tn)                                # retry succeeds
+    check_invariants(mgr)
+    assert tn.status == "running"
+
+
+def test_explicit_vf_attach_goes_through_admission(tmp_path):
+    """attach(vf_id=...) must not let a running tenant bind a second VF
+    (which would leak its first VF permanently ATTACHED)."""
+    from repro.core import AdmissionError
+    pool, mgr, tn = _small_system(tmp_path)
+    free_vf = next(vf.vf_id for vf in pool.vfs.values()
+                   if vf.owner is None)
+    with pytest.raises(AdmissionError):
+        mgr.attach(tn, vf_id=free_vf)
+    check_invariants(mgr)
+
+
+# ---------------------------------------------------------------------------
+# virtual clock
+# ---------------------------------------------------------------------------
+def test_virtual_clock():
+    c = VirtualClock()
+    assert c.now() == 0.0
+    c.advance(1.5)
+    c.stamp("x", tenant="vm0")
+    assert c.now() == 1.5 and c.events[0]["t"] == 1.5
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
