@@ -1,0 +1,19 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-pause bench-sweep
+
+test:            ## full tier-1 suite
+	$(PYTHON) -m pytest -x -q
+
+test-fast:       ## fast gate (skips @slow subprocess tests)
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
+bench: bench-pause bench-sweep   ## regenerate the BENCH_*.json artifacts
+
+bench-pause:
+	$(PYTHON) benchmarks/pause_path.py --repeats 3 --out BENCH_pause_path.json
+
+bench-sweep:
+	$(PYTHON) benchmarks/scenario_sweep.py --scenarios 50 \
+	    --out BENCH_scenario_sweep.json

@@ -1,14 +1,24 @@
-"""§Perf HC3: hillclimbing the pause/unpause path itself (the paper's own
-metric, Table I). Iterations:
+"""§Perf: hillclimbing the pause/unpause path itself (the paper's own
+metric, Table I). Iterations — see EXPERIMENTS.md §Perf for the protocol:
 
-  it.1  transfer-queue count (the QDMA queue analogue): 1/2/4/8/16 streams
-  it.2  qdma_pack int8 compression of the snapshot payload (lossy — bytes
-        vs error trade; intended for serving tenants / tolerant restarts)
-  it.3  incremental snapshots: identical (immutable) device arrays are not
-        re-transferred — a serving tenant's params never change between
-        pauses, only its KV cache does
+  HC1  transfer-queue count (the QDMA queue analogue): 1/2/4/8/16 streams
+       round-robining WHOLE leaves (the PR-1 engine, pipeline=False);
+       queues_8 is the baseline every later iteration must beat
+  HC2  qdma_pack int8 compression of the snapshot payload (lossy — bytes
+       vs error trade; intended for serving tenants / tolerant restarts)
+  HC3  incremental snapshots: identical (immutable) device arrays are not
+       re-transferred — a serving tenant's params never change between
+       pauses, only its KV cache does
+  HC4  pipelined descriptor engine: fixed-size row-chunk descriptors over
+       burst-batched transfer queues with an overlapped pack->D2H->
+       assemble pipeline (borrow transport on host-device grids; the
+       stream row shows the explicit chunked path)
+  HC5  pre-copy live pause: background snapshot rounds while the tenant
+       keeps stepping, then a stop-and-copy of only the dirtied leaves —
+       tenant-visible stall (stop_ms) vs the stop-the-world pause total
 
-Measured on a realistic ~400MB state (qwen3-100m-class params + adam).
+Measured on a realistic ~400MB-params state (qwen3-100m-class params +
+adam moments, ~900MB total) on the forced 8-device CPU host grid.
 """
 import os
 if __name__ == "__main__":
@@ -45,18 +55,23 @@ def bench(repeats: int = 3) -> list:
     nbytes = sum(x.nbytes for x in jax.tree.leaves(state))
     rows = []
 
-    def timeit(name, eng, tree, note=""):
-        ts = []
-        moved = None
+    def timeit(name, eng, tree, note="", save_stat="median"):
+        """save_stat='first' reports the FIRST save: for memo-bearing
+        rows whose later repeats identity-hit everything, the median
+        would time the all-skip path instead of the labeled workload."""
+        saves, restores = [], []
+        moved = descriptors = None
         for _ in range(repeats):
             t0 = time.perf_counter()
             staged = eng.save(tree)
-            ts.append(time.perf_counter() - t0)
+            saves.append(time.perf_counter() - t0)
             if moved is None:           # first save (memo cold)
                 moved = eng.last_stats.bytes_moved
-        t0 = time.perf_counter()
-        out = eng.restore(staged)
-        restore_s = time.perf_counter() - t0
+                descriptors = eng.last_stats.num_descriptors
+            t0 = time.perf_counter()
+            out = eng.restore(staged)
+            jax.block_until_ready(out)
+            restores.append(time.perf_counter() - t0)
         err = 0.0
         for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
             if np.issubdtype(np.asarray(b).dtype, np.floating):
@@ -64,32 +79,114 @@ def bench(repeats: int = 3) -> list:
                            np.asarray(b, np.float32))
                 s = np.abs(np.asarray(a, np.float32)).max() + 1e-9
                 err = max(err, float(d.max() / s))
-        rows.append({"name": name, "save_ms": statistics.median(ts) * 1000,
-                     "restore_ms": restore_s * 1000,
+        save_ms = (saves[0] if save_stat == "first"
+                   else statistics.median(saves)) * 1000
+        restore_ms = statistics.median(restores) * 1000
+        rows.append({"name": name, "save_ms": save_ms,
+                     "restore_ms": restore_ms,
+                     "save_plus_restore_ms": save_ms + restore_ms,
                      "bytes_moved": int(moved), "logical_bytes": int(nbytes),
+                     "descriptors": descriptors,
                      "max_rel_err": err, "note": note})
+        return rows[-1]
 
-    # it.1: queue sweep (uncompressed)
+    # HC1: queue sweep (uncompressed, PR-1 whole-leaf round-robin engine)
     for q in (1, 2, 4, 8, 16):
-        timeit(f"queues_{q}", StagingEngine(num_queues=q), state)
+        timeit(f"queues_{q}", StagingEngine(num_queues=q, pipeline=False),
+               state, note="PR-1 baseline engine" if q == 8 else "")
 
-    # it.2: int8 compression (block=128 divides every trailing dim here)
+    # HC2: int8 compression (block=128 divides every trailing dim here)
     timeit("int8", StagingEngine(num_queues=8, compression="int8",
-                                 block=128), state,
+                                 block=128, pipeline=False), state,
            note="lossy: bounded by one quant step (see test_properties)")
 
-    # it.3: incremental — second save of an UNCHANGED tree moves ~0 bytes
-    eng = StagingEngine(num_queues=8, incremental=True)
+    # HC3: incremental — second save of an UNCHANGED tree moves ~0 bytes
+    eng = StagingEngine(num_queues=8, incremental=True, pipeline=False)
     eng.save(state)                              # warm the memo
     timeit("incremental_unchanged", eng, state, note="params identical")
     # and a half-changed tree (simulates serving: cache moves, params don't)
     state2 = dict(state)
-    state2["opt"] = jax.tree.map(lambda x: x + 0 if False else x,
-                                 state["opt"])   # same objects
+    state2["opt"] = state["opt"]                 # same objects
     state2["params"] = jax.tree.map(lambda x: x * 1.0, state["params"])
     timeit("incremental_half_changed", eng, state2,
-           note="params changed, opt identical")
+           note="params changed, opt identical", save_stat="first")
+
+    # HC4: pipelined descriptor engine (chunk descriptors, burst queues,
+    # overlapped pack->D2H->assemble; borrow transport on this CPU grid)
+    timeit("pipelined", StagingEngine(num_queues=8), state,
+           note="descriptor engine, auto transport")
+    timeit("pipelined_stream",
+           StagingEngine(num_queues=8, transport="stream",
+                         chunk_bytes=16 << 20), state,
+           note="explicit chunked streaming (accelerator-shaped path)")
+    timeit("int8_pipelined",
+           StagingEngine(num_queues=8, compression="int8", block=128),
+           state, note="chunk-granular pack overlapped with D2H")
+
+    # HC5: pre-copy live pause vs stop-the-world, serving-shaped tenant
+    rows.extend(_bench_live_pause(jax, jnp, state, repeats))
     return rows
+
+
+def _bench_live_pause(jax, jnp, state, repeats: int) -> list:
+    """Stop-the-world pause_vf vs pause_vf_live on a tenant whose params
+    (~the full bench state) are clean and only a small KV cache is hot."""
+    import numpy as np
+    from repro.core import (DevicePool, StagingEngine, pause_vf,
+                            pause_vf_live, unpause_vf)
+    from repro.core.vf import VFState, VirtualFunction
+    from repro.sim import ServeSimTenant
+
+    def mk_tenant(tid):
+        params = jax.tree.map(lambda x: x + 0, state)   # private copy
+        cache = jnp.zeros((64, 1024), jnp.float32)      # ~256KB hot state
+        jax.block_until_ready((params, cache))   # don't time the copy
+        return ServeSimTenant(params, cache, tid=tid)
+
+    def mk_vf(vid):
+        vf = VirtualFunction(vf_id=vid)
+        vf.assign_devices(jax.devices()[:1], (1, 1))
+        vf.transition(VFState.ATTACHED)
+        return vf
+
+    pool = DevicePool(devices=jax.devices())
+    out = []
+
+    def run_one(name, live):
+        totals, stops = [], []
+        for r in range(repeats + 1):     # first iteration = warmup, dropped
+            tn = mk_tenant(f"{name}{r}")
+            vf = mk_vf(f"0000:0b:00.{r}")
+            vf.owner = tn.tid
+            tn.vf_id = vf.vf_id
+            staging = StagingEngine(num_queues=8, incremental=True)
+            for _ in range(4):
+                tn.step()                        # steady-state serving
+            if live:
+                snap, t = pause_vf_live(pool, vf, tn, staging, rounds=2,
+                                        step_fn=tn.step)
+            else:
+                snap, t = pause_vf(pool, vf, tn, staging)
+            if r > 0:
+                totals.append(t.total * 1e3)
+                stops.append(t.stop_ms)
+            # restore so the copies don't pile up in device memory
+            vf.assign_devices(jax.devices()[:1], (1, 1))
+            unpause_vf(pool, vf, tn, snap, staging)
+            tn.params = None
+            tn.cache = None
+        import statistics as st
+        return {"name": name, "total_ms": st.median(totals),
+                "stop_ms": st.median(stops)}
+
+    world = run_one("pause_stop_world", live=False)
+    world["note"] = "tenant stalled for the whole save"
+    live = run_one("pause_live_precopy", live=True)
+    live["stop_speedup_vs_stop_world"] = (
+        world["total_ms"] / max(live["stop_ms"], 1e-9))
+    live["note"] = ("pre-copy rounds in background; stop-and-copy moves "
+                    "only the dirty cache")
+    return [world, live]
 
 
 def main(argv=None):
@@ -101,7 +198,7 @@ def main(argv=None):
     for r in rows:
         print(json.dumps(r))
     if args.out:
-        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=1)
     return 0

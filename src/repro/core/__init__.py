@@ -6,7 +6,8 @@ and fault-tolerance built on the same snapshot machinery.
 """
 from repro.core.fault import HeartbeatMonitor, Supervisor
 from repro.core.manager import SVFFManager
-from repro.core.pause import PauseError, pause_vf, unpause_vf
+from repro.core.pause import (PauseError, PhaseTimings, pause_vf,
+                              pause_vf_live, unpause_vf)
 from repro.core.pool import DevicePool, PoolError
 from repro.core.qmp import ControlPlane
 from repro.core.records import RecordStore
@@ -20,8 +21,9 @@ from repro.core.vf import VFState, VFTransitionError, VirtualFunction
 __all__ = [
     "AdmissionError", "ConfigSpaceSnapshot", "ControlPlane",
     "DevicePausedError", "DevicePool", "HeartbeatMonitor", "PauseError",
-    "PlacementRequest", "PoolError", "POLICY_NAMES", "RecordStore",
-    "SVFFManager", "Scheduler", "StagingEngine", "Supervisor", "Tenant",
-    "TransferStats", "VFState", "VFTransitionError", "VirtualFunction",
-    "make_scheduler", "pause_vf", "unpause_vf",
+    "PhaseTimings", "PlacementRequest", "PoolError", "POLICY_NAMES",
+    "RecordStore", "SVFFManager", "Scheduler", "StagingEngine",
+    "Supervisor", "Tenant", "TransferStats", "VFState",
+    "VFTransitionError", "VirtualFunction", "make_scheduler", "pause_vf",
+    "pause_vf_live", "unpause_vf",
 ]

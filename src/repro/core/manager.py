@@ -28,7 +28,8 @@ import jax
 
 from repro.configs.base import RunConfig
 from repro.core.pool import DevicePool, PoolError
-from repro.core.pause import PhaseTimings, pause_vf, unpause_vf
+from repro.core.pause import (PhaseTimings, pause_vf, pause_vf_live,
+                              unpause_vf)
 from repro.core.records import RecordStore
 from repro.core.scheduler import (PlacementRequest, Scheduler,
                                   make_scheduler)
@@ -144,7 +145,7 @@ class SVFFManager:
                 f"{vf.state.value} (owner {vf.owner})")
         t0 = time.perf_counter()
         state = tenant.export_state()
-        payload = self.staging.save(state)
+        payload = self.staging.save(state, tenant=tenant.tid)
         self._detach_counter += 1
         store = CheckpointStore(self.detach_store_dir, keep=0)
         store.save(self._detach_counter, payload,
@@ -166,6 +167,9 @@ class SVFFManager:
         # only set_num_vfs / pause change device ownership.
         vf.transition(VFState.DETACHED)
         self.records.remove(tenant.tid)
+        # the staging memo's device refs are dead after unbind; drop them so
+        # the memo stays bounded across tenant churn
+        self.staging.clear(tenant.tid)
         t.add("unbind", time.perf_counter() - t0)
         return t
 
@@ -173,6 +177,18 @@ class SVFFManager:
     def pause(self, tenant: Tenant) -> PhaseTimings:
         vf = self.pool.find(tenant.vf_id)
         snap, t = pause_vf(self.pool, vf, tenant, self.staging)
+        self.snapshots[tenant.tid] = snap        # held in host RAM
+        return t
+
+    def pause_live(self, tenant: Tenant, *, rounds: int = 2,
+                   step_fn=None) -> PhaseTimings:
+        """Pre-copy live pause: the tenant keeps stepping through
+        ``rounds`` background snapshot rounds (``step_fn`` models its
+        concurrent work); only the final stop-and-copy — ``t.stop_ms`` —
+        stalls it."""
+        vf = self.pool.find(tenant.vf_id)
+        snap, t = pause_vf_live(self.pool, vf, tenant, self.staging,
+                                rounds=rounds, step_fn=step_fn)
         self.snapshots[tenant.tid] = snap        # held in host RAM
         return t
 

@@ -45,6 +45,7 @@ class ConfigSpaceSnapshot:
     created_at: float = dataclasses.field(default_factory=time.time)
     stats: Optional[TransferStats] = None
     compressed: bool = False
+    precopy_rounds: int = 0            # >0: taken via pause_vf_live
 
     def describe(self) -> dict:
         return {
@@ -55,4 +56,5 @@ class ConfigSpaceSnapshot:
                           for k in self.exec_keys],
             "bytes": (self.stats.bytes_moved if self.stats else None),
             "compressed": self.compressed,
+            "precopy_rounds": self.precopy_rounds,
         }

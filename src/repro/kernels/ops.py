@@ -72,3 +72,26 @@ def qdma_unpack(q, scale, *, dtype: str = "float32",
         return _ref.qdma_unpack_ref(q, scale, dtype=dtype)
     return _qp.qdma_unpack(q, scale, dtype=dtype,
                            interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "block", "interpret",
+                                             "backend"))
+def qdma_pack_rows(x, lo, *, rows: int, block: int = 256,
+                   interpret: bool = False, backend: str = "auto"):
+    """Chunk-granular pack: one descriptor = rows [lo, lo+rows) of the 2-D
+    row view. ``lo`` is traced, so equal-size chunks share an executable."""
+    if backend == "ref" or (backend == "auto" and not _on_tpu()
+                             and not interpret):
+        return _ref.qdma_pack_rows_ref(x, lo, rows, block=block)
+    return _qp.qdma_pack_rows(x, lo, rows=rows, block=block,
+                              interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "backend"))
+def qdma_digest(x, *, interpret: bool = False, backend: str = "auto"):
+    """On-device content fingerprint, (2,) uint32 — the staging engine's
+    dirty-tracking primitive (skip mutated-but-equal leaves)."""
+    if backend == "ref" or (backend == "auto" and not _on_tpu()
+                             and not interpret):
+        return _ref.qdma_digest_ref(x)
+    return _qp.qdma_digest(x, interpret=interpret or not _on_tpu())

@@ -9,6 +9,12 @@ role of one descriptor.
 
 pack:   x (M, L) -> q int8 (M, L), scale fp32 (M, L/block)
 unpack: inverse (dequantize).
+rows:   chunk-granular entry points (`qdma_pack_rows`) that pack ONE
+        descriptor — a row range of the 2-D view — so the staging engine
+        can overlap pack of descriptor i+1 with D2H of descriptor i.
+digest: `qdma_digest` — a position-weighted 2x32-bit content fingerprint
+        of the raw bytes, computed on device, used by the staging engine's
+        dirty tracking to skip mutated-but-equal leaves without a D2H.
 """
 from __future__ import annotations
 
@@ -68,6 +74,69 @@ def qdma_pack(x, *, block: int = 256, rows_per_tile: int = 256,
     )(x2)
     return (q.reshape(shape),
             scale.reshape(shape[:-1] + (L // block,)))
+
+
+def qdma_pack_rows(x, lo, *, rows: int, block: int = 256,
+                   rows_per_tile: int = 256, interpret: bool = False):
+    """Pack ONE descriptor: rows [lo, lo+rows) of the 2-D row view of x.
+
+    ``lo`` is a traced scalar (chunks of equal ``rows`` share one compiled
+    executable); ``rows`` is static. Returns (q (rows, L) int8,
+    scale (rows, L/block) fp32)."""
+    x2 = _as2d(x)
+    chunk = jax.lax.dynamic_slice_in_dim(x2, lo, rows, axis=0)
+    return qdma_pack(chunk, block=block, rows_per_tile=rows_per_tile,
+                     interpret=interpret)
+
+
+def _digest_kernel(v_ref, out_ref, *, lanes: int):
+    i = pl.program_id(0)
+    v = v_ref[...].astype(jnp.uint32)                 # (rows, lanes)
+    rows = v.shape[0]
+    # global flat index of each element (uint32 wrap-around is fine: the
+    # digest only needs determinism, not order)
+    base = (i * rows * lanes)
+    idx = (jax.lax.broadcasted_iota(jnp.uint32, v.shape, 0) *
+           jnp.uint32(lanes) +
+           jax.lax.broadcasted_iota(jnp.uint32, v.shape, 1) +
+           jnp.uint32(base))
+    w1 = idx * jnp.uint32(2654435761) + jnp.uint32(0x9E3779B1)
+    w2 = idx * jnp.uint32(0x85EBCA6B) + jnp.uint32(0xC2B2AE35)
+    out_ref[0, 0] = jnp.sum(v * w1)
+    out_ref[0, 1] = jnp.sum(v * w2)
+
+
+def _bytes_view(x):
+    """Raw little-endian byte view of x as a flat uint8 vector."""
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    u8 = jax.lax.bitcast_convert_type(x, jnp.uint8)
+    return u8.reshape(-1)
+
+
+def qdma_digest(x, *, rows_per_tile: int = 512, lanes: int = 128,
+                interpret: bool = False):
+    """Content fingerprint of x's raw bytes: (2,) uint32. Equal bytes ->
+    equal digest; position-weighted so permutations don't collide. Zero
+    padding is digest-neutral (padded elements contribute 0)."""
+    u8 = _bytes_view(x)
+    n = int(u8.shape[0])
+    per = rows_per_tile * lanes
+    npad = (-n) % per
+    if npad:
+        u8 = jnp.pad(u8, (0, npad))
+    v = u8.reshape(-1, lanes)
+    grid = (v.shape[0] // rows_per_tile,)
+    kern = functools.partial(_digest_kernel, lanes=lanes)
+    parts = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows_per_tile, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 2), jnp.uint32),
+        interpret=interpret,
+    )(v)
+    return jnp.sum(parts, axis=0, dtype=jnp.uint32)
 
 
 def qdma_unpack(q, scale, *, dtype="float32", rows_per_tile: int = 256,

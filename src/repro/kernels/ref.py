@@ -94,3 +94,25 @@ def qdma_unpack_ref(q, scale, dtype="float32"):
     qb = q.reshape(q.shape[:-1] + (scale.shape[-1], block))
     x = qb.astype(jnp.float32) * scale[..., None]
     return x.reshape(q.shape).astype(dtype)
+
+
+def qdma_pack_rows_ref(x, lo, rows: int, block: int = 256):
+    """Pack rows [lo, lo+rows) of the 2-D row view of x (one descriptor)."""
+    x2 = x.reshape(-1, x.shape[-1]) if x.ndim else x.reshape(1, 1)
+    chunk = jax.lax.dynamic_slice_in_dim(x2, lo, rows, axis=0)
+    return qdma_pack_ref(chunk, block=block)
+
+
+def qdma_digest_ref(x):
+    """Position-weighted 2x32-bit content fingerprint of x's raw bytes.
+    Bit-equal arrays (same dtype) digest equal; differing bytes at any
+    position flip the weighted sums with overwhelming probability."""
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    u8 = jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+    v = u8.astype(jnp.uint32)
+    idx = jnp.arange(v.shape[0], dtype=jnp.uint32)
+    w1 = idx * jnp.uint32(2654435761) + jnp.uint32(0x9E3779B1)
+    w2 = idx * jnp.uint32(0x85EBCA6B) + jnp.uint32(0xC2B2AE35)
+    return jnp.stack([jnp.sum(v * w1, dtype=jnp.uint32),
+                      jnp.sum(v * w2, dtype=jnp.uint32)])

@@ -44,6 +44,13 @@ class ServeEngine:
         self.pos = np.full((slots,), -1, np.int64)      # last written index
         self.last_token = np.zeros((slots,), np.int32)
         self.paused = False
+        self._finished: list[Request] = []              # completed requests
+        # per-step dirty set: which export_state keys changed since the
+        # last export. Informational for drivers (and asserted in tests);
+        # the byte-level skipping itself happens in StagingEngine's
+        # identity/digest memo — params stay the same jax objects across
+        # exports, so a live pause's stop-and-copy moves them 0 times.
+        self._dirty = {"params", "cache", "pos", "last_token"}
         from repro.train.step import make_serve_steps
         prefill, decode = make_serve_steps(run, rules)
         self._prefill = jax.jit(prefill)
@@ -101,12 +108,14 @@ class ServeEngine:
                                                 jnp.bfloat16)
                 req_cache, last_logits = self._prefill(self.params, batch)
                 self._insert(s, req_cache, plen)
+                self._dirty |= {"cache", "pos", "last_token"}
                 tok = int(jnp.argmax(last_logits[0]))
                 req.out.append(tok)
                 npatch = (cfg.frontend.num_patches
                           if cfg.frontend.kind == "vision" else 0)
                 if tok == req.eos_id or req.max_new_tokens <= 1:
                     req.done = True        # finished at prefill
+                    self._finished.append(req)
                     continue
                 self.active[s] = req
                 self.pos[s] = npatch + plen - 1
@@ -126,6 +135,7 @@ class ServeEngine:
         pos = jnp.asarray(np.maximum(self.pos + 1, 0), jnp.int32)
         logits, self._cache = self._decode(self.params, self._cache,
                                            tokens, pos)
+        self._dirty |= {"cache", "pos", "last_token"}
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for s in act:
             req = self.active[s]
@@ -136,6 +146,7 @@ class ServeEngine:
             if (len(req.out) >= req.max_new_tokens or tok == req.eos_id
                     or self.pos[s] + 1 >= self.max_len):
                 req.done = True
+                self._finished.append(req)
                 self.active[s] = None
                 self._reset_slot(s)
         return len(act)
@@ -153,18 +164,32 @@ class ServeEngine:
         self.pos[slot] = -1
 
     def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
-        done: list[Request] = []
+        """Drive the engine until queue and slots drain; returns every
+        request completed during the run (prefill-finished ones included),
+        in completion order."""
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 break
+        done, self._finished = self._finished, []
         return done
 
     # -- state for SVFF pause (config-space save) ------------------------------
+    def dirty_keys(self) -> set:
+        """Top-level export_state keys mutated since the last export —
+        a pre-copy pause can skip the clean ones (params, in steady
+        state) in its stop-and-copy."""
+        return set(self._dirty)
+
     def export_state(self) -> dict:
-        return {"cache": self._cache, "pos": self.pos.copy(),
-                "last_token": self.last_token.copy()}
+        st = {"params": self.params, "cache": self._cache,
+              "pos": self.pos.copy(), "last_token": self.last_token.copy()}
+        self._dirty = set()
+        return st
 
     def import_state(self, st: dict):
+        if "params" in st:
+            self.params = st["params"]
         self._cache = st["cache"]
         self.pos = st["pos"]
         self.last_token = st["last_token"]
+        self._dirty = set(st)

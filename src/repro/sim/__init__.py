@@ -37,14 +37,15 @@ from repro.sim.clock import VirtualClock
 from repro.sim.harness import (OpResult, ScenarioResult, ScenarioRunner,
                                run_scenario)
 from repro.sim.invariants import (InvariantViolation, check_invariants,
-                                  check_timings)
+                                  check_pause_timings, check_timings)
 from repro.sim.scenario import (Op, OP_KINDS, ScenarioConfig,
                                 generate_scenario)
-from repro.sim.tenant import SimTenant
+from repro.sim.tenant import ServeSimTenant, SimTenant
 
 __all__ = [
     "InvariantViolation", "Op", "OP_KINDS", "OpResult", "ScenarioConfig",
-    "ScenarioResult", "ScenarioRunner", "SimTenant", "VirtualClock",
-    "check_invariants", "check_timings", "generate_scenario",
-    "run_scenario",
+    "ScenarioResult", "ScenarioRunner", "ServeSimTenant", "SimTenant",
+    "VirtualClock",
+    "check_invariants", "check_pause_timings", "check_timings",
+    "generate_scenario", "run_scenario",
 ]

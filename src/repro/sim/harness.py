@@ -33,7 +33,7 @@ from repro.core.tenant import DevicePausedError
 from repro.core.vf import VFTransitionError
 from repro.sim.clock import VirtualClock
 from repro.sim.invariants import (InvariantViolation, check_invariants,
-                                  check_timings)
+                                  check_pause_timings, check_timings)
 from repro.sim.scenario import Op, ScenarioConfig, generate_scenario
 from repro.sim.tenant import SimTenant
 
@@ -120,7 +120,22 @@ class ScenarioRunner:
             mgr.detach(self._tenant(op.tenant))
             clock.advance(0.02)
         elif op.kind == "pause":
-            mgr.pause(self._tenant(op.tenant))
+            t = mgr.pause(self._tenant(op.tenant))
+            check_pause_timings(t, live=False)
+            clock.advance(0.01)
+        elif op.kind == "pause_live":
+            tn = self._tenant(op.tenant)
+            stepped = [0]
+
+            def _live_step():
+                # the tenant keeps working between pre-copy rounds — the
+                # whole point of the live path (invariant I4 then proves
+                # those steps survive the pause bit-exactly)
+                tn.run_steps(1)
+                stepped[0] += 1
+            t = mgr.pause_live(tn, rounds=2, step_fn=_live_step)
+            self.expected_steps[op.tenant] += stepped[0]
+            check_pause_timings(t, live=True)
             clock.advance(0.01)
         elif op.kind == "unpause":
             mgr.unpause(self._tenant(op.tenant))

@@ -16,6 +16,11 @@
       detached tenants have a disk snapshot to re-attach from
   I6  Table-II timing dicts are well-formed: exactly the paper's four
       macro steps + total, all finite and non-negative, total = sum
+  I7  pause stall accounting (``check_pause_timings``): every pause's
+      PhaseTimings contains the three stop-and-copy steps, tenant-visible
+      ``stop_s`` <= ``total``, only ``precopy_*`` phases may be
+      background, and a live pause must have run background pre-copy —
+      i.e. the reported stall is never under- or over-stated
 
 Violations raise ``InvariantViolation`` tagged by the caller with the
 scenario seed and op index, which is all that is needed to reproduce.
@@ -142,3 +147,41 @@ def check_timings(timings: dict) -> None:
     body = sum(v for k, v in timings.items() if k != "total")
     if abs(body - timings["total"]) > 1e-6:
         _fail(f"I6 total {timings['total']} != sum of steps {body}")
+
+
+#: the tenant-visible phases every pause's stop-and-copy must contain
+PAUSE_STOP_PHASES = frozenset({"save_config_space", "unregister_pci",
+                               "unregister_vfio"})
+
+
+def check_pause_timings(t, live: bool = False) -> None:
+    """I7 — a pause's ``PhaseTimings`` is well-formed and its stall is
+    bounded: the tenant-visible ``stop_s`` never exceeds ``total``, only
+    pre-copy rounds may run in the background, and a live pause accounts
+    its rounds as background (so stop-and-copy is the ONLY stall)."""
+    for k, v in t.phases.items():
+        if not isinstance(v, float) or not math.isfinite(v) or v < 0:
+            _fail(f"I7 pause phase {k}={v!r} not finite/non-negative")
+    if not PAUSE_STOP_PHASES <= set(t.phases):
+        _fail(f"I7 pause phases {sorted(t.phases)} missing stop-and-copy "
+              f"steps {sorted(PAUSE_STOP_PHASES)}")
+    if t.stop_s > t.total + 1e-9:
+        _fail(f"I7 stop_s {t.stop_s} exceeds total {t.total}")
+    for name in t.background:
+        if not name.startswith("precopy_"):
+            _fail(f"I7 non-precopy phase {name!r} marked background "
+                  f"(stall under-reported)")
+    if t.background & PAUSE_STOP_PHASES:
+        _fail(f"I7 stop-and-copy phase marked background: {t.background}")
+    if live:
+        if not t.background:
+            _fail("I7 live pause ran no background pre-copy rounds")
+        precopy = {k for k in t.phases if k.startswith("precopy_")}
+        if precopy != t.background:
+            # a precopy phase recorded with stop=True would inflate the
+            # reported stall; a stop phase in background would hide it
+            _fail(f"I7 background {sorted(t.background)} != recorded "
+                  f"pre-copy rounds {sorted(precopy)}")
+    elif t.background:
+        _fail(f"I7 stop-the-world pause has background phases "
+              f"{sorted(t.background)}")

@@ -12,6 +12,10 @@ Op kinds (the paper's management surface + fault injection):
   attach   bind a (new or previously detached) tenant via the scheduler
   detach   standard SR-IOV detach (state parked on disk)
   pause    SVFF pause (state staged to host RAM, devices released)
+  pause_live  pre-copy live pause: the tenant keeps stepping through
+           background snapshot rounds, then a short stop-and-copy; the
+           harness checks the stall accounting (invariant I7) and the
+           usual bit-identity on unpause (I4)
   unpause  restore a paused tenant onto its VF
   reconf   full reconfiguration cycle (grow or shrink #VF) — returns the
            Table-II timing dict the invariant checker validates
@@ -32,8 +36,8 @@ import dataclasses
 import random
 from typing import Optional
 
-OP_KINDS = ("init", "attach", "detach", "pause", "unpause", "reconf",
-            "migrate", "fault", "step")
+OP_KINDS = ("init", "attach", "detach", "pause", "pause_live", "unpause",
+            "reconf", "migrate", "fault", "step")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,8 +67,9 @@ class ScenarioConfig:
 
 
 # weights for the op mix after init (step dominates: tenants mostly work)
-_WEIGHTS = (("step", 30), ("pause", 10), ("unpause", 14), ("reconf", 10),
-            ("attach", 10), ("detach", 6), ("migrate", 7), ("fault", 6))
+_WEIGHTS = (("step", 30), ("pause", 6), ("pause_live", 6), ("unpause", 14),
+            ("reconf", 10), ("attach", 10), ("detach", 6), ("migrate", 7),
+            ("fault", 6))
 
 
 def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
@@ -96,10 +101,10 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
         if kind == "step" and running:
             ops.append(Op("step", tenant=rng.choice(sorted(running)),
                           steps=rng.randint(1, 3)))
-        elif kind == "pause" and running:
+        elif kind in ("pause", "pause_live") and running:
             t = rng.choice(sorted(running))
             running.remove(t); paused.append(t)
-            ops.append(Op("pause", tenant=t))
+            ops.append(Op(kind, tenant=t))
         elif kind == "unpause" and paused:
             t = rng.choice(sorted(paused))
             paused.remove(t); running.append(t)
@@ -160,6 +165,8 @@ def _chaos_op(rng, running, paused, detached, next_id) -> Optional[Op]:
                        chaos=True),            # paused VF can't detach
                     Op("pause", tenant=rng.choice(sorted(paused)),
                        chaos=True),            # double pause
+                    Op("pause_live", tenant=rng.choice(sorted(paused)),
+                       chaos=True),            # live pause of paused VF
                     Op("step", tenant=rng.choice(sorted(paused)),
                        chaos=True)]            # I/O while paused
     if running:

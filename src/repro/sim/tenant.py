@@ -173,3 +173,45 @@ class SimTenant:
 
     def inject_failure(self):
         self._fail_next = True
+
+
+class ServeSimTenant:
+    """Serving-shaped pause-protocol stub: big IMMUTABLE params plus a
+    small hot cache that every decode step replaces — the exact dirty
+    profile ``ServeEngine.dirty_keys`` reports. Shared by the pause-path
+    benchmark (HC5) and the staging tests so both exercise one copy of
+    the duck-typed tenant protocol."""
+
+    def __init__(self, params, cache, tid: str = "serve0"):
+        self.tid = tid
+        self.steps_done = 0
+        self.status = "running"
+        self.vf_id: Optional[str] = None
+        self._exec_cache: dict = {}
+        self.params = params
+        self.cache = cache
+
+    def step(self):
+        self.cache = self.cache + 1.0       # mutates ONLY the cache
+        self.steps_done += 1
+
+    def export_state(self):
+        return {"params": self.params, "cache": self.cache}
+
+    def export_specs(self):
+        return {}
+
+    def shardings_for(self, vf):
+        return None
+
+    def state_template(self):
+        return jax.tree.map(np.zeros_like, self.export_state())
+
+    def suspend(self):
+        self.params = None
+        self.cache = None
+        self.status = "paused"
+
+    def resume(self, state, vf: VirtualFunction):
+        self.params, self.cache = state["params"], state["cache"]
+        self.status = "running"

@@ -32,6 +32,10 @@ def sampled_from(seq) -> _Strategy:
     return _Strategy(lambda r: items[r.randrange(len(items))])
 
 
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.randrange(2)))
+
+
 class settings:
     def __init__(self, max_examples: int = 100, deadline=None, **_):
         self.max_examples = max_examples
@@ -73,6 +77,7 @@ def install():
     st = types.ModuleType("hypothesis.strategies")
     st.integers = integers
     st.sampled_from = sampled_from
+    st.booleans = booleans
     mod.strategies = st
     sys.modules["hypothesis"] = mod
     sys.modules["hypothesis.strategies"] = st

@@ -66,11 +66,12 @@ def test_qdma_roundtrip_error_bound(shape, block, scale_pow):
 
 
 @given(seed=st.integers(0, 10_000), compression=st.sampled_from(
-    ["none", "int8"]))
+    ["none", "int8"]), pipeline=st.booleans())
 @HSET
-def test_staging_roundtrip(seed, compression):
+def test_staging_roundtrip(seed, compression, pipeline):
     """save->restore is identity (bit-exact without compression; bounded
-    error with int8) and preserves tree structure/dtypes."""
+    error with int8) and preserves tree structure/dtypes — for both the
+    pipelined descriptor engine and the PR-1 baseline."""
     rng = np.random.default_rng(seed)
     tree = {"a": jnp.asarray(rng.standard_normal((8, 512)), jnp.float32),
             "b": {"c": jnp.asarray(rng.integers(0, 100, (4,)), jnp.int32),
@@ -78,7 +79,7 @@ def test_staging_roundtrip(seed, compression):
                                    jnp.float32)},
             "s": jnp.float32(3.25)}
     eng = StagingEngine(num_queues=2, compression=compression,
-                        min_quant_size=1024)
+                        min_quant_size=1024, pipeline=pipeline)
     staged = eng.save(tree)
     out = eng.restore(staged)
     assert jax.tree.structure(out) == jax.tree.structure(tree)
@@ -90,6 +91,58 @@ def test_staging_roundtrip(seed, compression):
             np.testing.assert_array_equal(x, y)
         else:
             np.testing.assert_allclose(x, y, atol=np.abs(x).max() / 64)
+
+
+@given(shape=st.sampled_from([(1023, 17), (7, 3, 129), (4097,), (33, 255),
+                              (2, 1, 5, 31)]),
+       chunk_bytes=st.sampled_from([256, 1024, 65536]),
+       transport=st.sampled_from(["stream", "borrow"]))
+@HSET
+def test_descriptor_chunking_roundtrips_odd_shapes(shape, chunk_bytes,
+                                                   transport):
+    """Row-chunk descriptors are an implementation detail: any leaf shape
+    (odd rows, tiny trailing dims, high rank) must reassemble bit-exactly
+    for any chunk size and transport."""
+    rng = np.random.default_rng(hash((shape, chunk_bytes)) % 2**32)
+    tree = {"x": jnp.asarray(rng.standard_normal(shape), jnp.float32),
+            "i": jnp.asarray(rng.integers(-5, 5, shape), jnp.int8)}
+    eng = StagingEngine(num_queues=3, chunk_bytes=chunk_bytes,
+                        transport=transport)
+    out = eng.restore(eng.save(tree))
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+
+
+@given(seed=st.integers(0, 1000), compression=st.sampled_from(
+    ["none", "int8"]), incremental=st.booleans())
+@HSET
+def test_staging_stats_symmetric(seed, compression, incremental):
+    """save/restore TransferStats agree on one unit of account: bytes
+    that actually cross the link (packed bytes for quantized leaves,
+    counted once). A save's skips are visible as skipped_bytes, so
+    moved+skipped always equals the restore's moved."""
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.standard_normal((16, 512)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((8, 256)), jnp.float32),
+            "c": jnp.asarray(rng.integers(0, 9, (31,)), jnp.int32)}
+    eng = StagingEngine(num_queues=2, compression=compression,
+                        min_quant_size=1024, incremental=incremental)
+    eng.save(tree, tenant="t0")
+    first = eng.last_stats
+    assert first.skipped_bytes == 0
+    staged = eng.save(tree, tenant="t0")          # may skip via memo
+    save_stats = eng.last_stats
+    eng.restore(staged)
+    restore_stats = eng.last_stats
+    assert (save_stats.bytes_moved + save_stats.skipped_bytes
+            == restore_stats.bytes_moved)
+    assert first.bytes_moved == restore_stats.bytes_moved
+    if incremental:
+        assert save_stats.bytes_moved == 0        # identical jax leaves
+        assert save_stats.skipped_bytes == restore_stats.bytes_moved
+    assert save_stats.logical_bytes == sum(
+        x.nbytes for x in jax.tree.leaves(tree))
 
 
 # ---------------------------------------------------------------------------

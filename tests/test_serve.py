@@ -72,6 +72,45 @@ def test_engine_pause_queues_requests(setup):
     assert len(eng.queue) == 0
 
 
+def test_run_until_idle_returns_finished_requests(setup):
+    """Regression: run_until_idle used to always return [] — finished
+    requests (decode-finished AND prefill-finished) must be collected."""
+    run, model, params = setup
+    eng = ServeEngine(run, params, slots=2, max_len=48)
+    reqs = [Request(rid=0, prompt=np.arange(4) % 100, max_new_tokens=4),
+            Request(rid=1, prompt=(np.arange(6) * 3) % 100,
+                    max_new_tokens=1),       # finishes at prefill
+            Request(rid=2, prompt=(np.arange(5) * 5 + 2) % 100,
+                    max_new_tokens=3)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_idle()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(r.done for r in done)
+    assert len(done[0].out) >= 1
+    # a second call returns only newly-finished work, not stale requests
+    eng.submit(Request(rid=3, prompt=np.arange(4) % 100, max_new_tokens=2))
+    done2 = eng.run_until_idle()
+    assert [r.rid for r in done2] == [3]
+
+
+def test_engine_dirty_set_tracks_per_step_mutations(setup):
+    """Serving tenants pre-copy params-free: params are clean after the
+    first export; decode steps dirty only the cache/positions."""
+    run, model, params = setup
+    eng = ServeEngine(run, params, slots=1, max_len=48)
+    assert "params" in eng.dirty_keys()          # never exported yet
+    st = eng.export_state()
+    assert set(st) == {"params", "cache", "pos", "last_token"}
+    assert st["params"] is params
+    assert eng.dirty_keys() == set()
+    eng.submit(Request(rid=0, prompt=np.arange(4) % 50, max_new_tokens=2))
+    eng.run_until_idle()
+    assert eng.dirty_keys() == {"cache", "pos", "last_token"}
+    st2 = eng.export_state()
+    assert st2["params"] is params               # identity-clean for memo
+
+
 def test_engine_eos_stops_early(setup):
     run, model, params = setup
     # discover the first greedy token, then use it as the EOS id
