@@ -1,7 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-pause bench-sweep
+.PHONY: test test-fast chaos chaos-fast bench bench-pause bench-sweep \
+	bench-chaos
 
 test:            ## full tier-1 suite
 	$(PYTHON) -m pytest -x -q
@@ -9,7 +10,13 @@ test:            ## full tier-1 suite
 test-fast:       ## fast gate (skips @slow subprocess tests)
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
-bench: bench-pause bench-sweep   ## regenerate the BENCH_*.json artifacts
+chaos:           ## full crash matrix via pytest (what CI runs on main)
+	SVFF_CHAOS_FULL=1 $(PYTHON) -m pytest -x -q -m chaos
+
+chaos-fast:      ## PR-gate crash matrix subset
+	$(PYTHON) -m pytest -x -q -m chaos
+
+bench: bench-pause bench-sweep bench-chaos  ## regenerate BENCH_*.json
 
 bench-pause:
 	$(PYTHON) benchmarks/pause_path.py --repeats 3 --out BENCH_pause_path.json
@@ -17,3 +24,7 @@ bench-pause:
 bench-sweep:
 	$(PYTHON) benchmarks/scenario_sweep.py --scenarios 50 \
 	    --out BENCH_scenario_sweep.json
+
+bench-chaos:     ## the crash-matrix artifact (points x seeds x policies)
+	$(PYTHON) benchmarks/crash_matrix.py --seeds 20 \
+	    --out BENCH_crash_matrix.json

@@ -149,6 +149,29 @@ class CheckpointStore:
         with open(os.path.join(d, "MANIFEST.json")) as f:
             return json.load(f)["metadata"]
 
+    def remove(self, step: int) -> bool:
+        """Delete one checkpoint (idempotent). Crash recovery uses this to
+        drop the orphan snapshot of a detach that was rolled back."""
+        d = os.path.join(self.dir, f"step_{step}")
+        if os.path.isdir(d):
+            shutil.rmtree(d, ignore_errors=True)
+            return True
+        return False
+
+    def sweep_tmp(self) -> int:
+        """Remove ``.tmp_step_*`` staging dirs a crash mid-save left
+        behind (they never had a manifest, so restores already ignore
+        them — this just reclaims the space)."""
+        n = 0
+        if not os.path.isdir(self.dir):
+            return n
+        for d in os.listdir(self.dir):
+            if d.startswith(".tmp_step_"):
+                shutil.rmtree(os.path.join(self.dir, d),
+                              ignore_errors=True)
+                n += 1
+        return n
+
     def _gc(self):
         steps = self.steps()
         for s in steps[:-self.keep] if self.keep else []:

@@ -4,8 +4,10 @@ DevicePool (PF) -> VirtualFunction slices -> Tenants (VMs), with the novel
 pause/unpause mechanism, init/reconf automation, QMP-style control plane,
 and fault-tolerance built on the same snapshot machinery.
 """
-from repro.core.fault import HeartbeatMonitor, Supervisor
-from repro.core.manager import SVFFManager
+from repro.core.fault import (CrashPlane, HeartbeatMonitor, InjectedCrash,
+                              Supervisor, crash_plane, crashpoint)
+from repro.core.journal import OpJournal
+from repro.core.manager import ManagerError, SVFFManager, UnknownTenantError
 from repro.core.pause import (PauseError, PhaseTimings, pause_vf,
                               pause_vf_live, unpause_vf)
 from repro.core.pool import DevicePool, PoolError
@@ -19,11 +21,12 @@ from repro.core.tenant import DevicePausedError, Tenant
 from repro.core.vf import VFState, VFTransitionError, VirtualFunction
 
 __all__ = [
-    "AdmissionError", "ConfigSpaceSnapshot", "ControlPlane",
-    "DevicePausedError", "DevicePool", "HeartbeatMonitor", "PauseError",
-    "PhaseTimings", "PlacementRequest", "PoolError", "POLICY_NAMES",
-    "RecordStore", "SVFFManager", "Scheduler", "StagingEngine",
-    "Supervisor", "Tenant", "TransferStats", "VFState",
-    "VFTransitionError", "VirtualFunction", "make_scheduler", "pause_vf",
-    "pause_vf_live", "unpause_vf",
+    "AdmissionError", "ConfigSpaceSnapshot", "ControlPlane", "CrashPlane",
+    "DevicePausedError", "DevicePool", "HeartbeatMonitor", "InjectedCrash",
+    "ManagerError", "OpJournal", "PauseError", "PhaseTimings",
+    "PlacementRequest", "PoolError", "POLICY_NAMES", "RecordStore",
+    "SVFFManager", "Scheduler", "StagingEngine", "Supervisor", "Tenant",
+    "TransferStats", "UnknownTenantError", "VFState", "VFTransitionError",
+    "VirtualFunction", "crash_plane", "crashpoint", "make_scheduler",
+    "pause_vf", "pause_vf_live", "unpause_vf",
 ]

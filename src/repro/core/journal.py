@@ -1,0 +1,184 @@
+"""OpJournal — write-ahead intent log for reconfiguration operations.
+
+Every mutating manager op (attach / detach / pause / pause_live / unpause
+/ migrate) follows the WAL discipline:
+
+    entry = journal.begin(op, tenant, vf_id=..., ...)   # BEFORE any mutation
+    ... mutate pool / tenant / records / snapshots ...
+    journal.commit(entry)                               # AFTER the last one
+
+A crash anywhere in between leaves a *pending* entry on disk;
+``SVFFManager.recover`` reconciles each pending entry against the
+surviving state (pool, guests, records, RAM snapshots) and either rolls
+the op forward to completion or rolls it back, then resolves the entry.
+
+Durability follows the same discipline as ``RecordStore``/
+``CheckpointStore``: each entry is one JSON file written to ``*.part``,
+flushed + fsync'd, then atomically renamed into place; status changes
+(pending -> committed | aborted) rewrite the file the same way, so a
+crash mid-write can at worst leave a ``*.part`` file (ignored on read,
+swept by recovery) — never a torn entry.
+"""
+from __future__ import annotations
+
+import copy
+import json
+import os
+from typing import Optional
+
+PENDING = "pending"
+COMMITTED = "committed"
+ABORTED = "aborted"
+
+#: canonical catalogue of journaled ops -> the tenant status a COMMITTED
+#: entry implies. Single source of truth for recovery, the I8 replay in
+#: sim/invariants.py, and the chaos harness's outcome checks.
+COMPLETED_STATUS = {"attach": "running", "detach": "detached",
+                    "pause": "paused", "pause_live": "paused",
+                    "unpause": "running", "migrate": "running"}
+
+#: ops recovery knows how to reconcile (and I8 knows how to replay)
+JOURNALED_OPS = tuple(COMPLETED_STATUS)
+
+
+class JournalError(RuntimeError):
+    pass
+
+
+def _fsync_dir(path: str) -> None:
+    """Make a rename durable (no-op on platforms without dir fsync)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+class OpJournal:
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self._seq = self._max_seq()
+        # entry cache: the invariant checker replays the journal after
+        # every op — without this, each check re-reads every entry file.
+        # The files stay the source of truth (a fresh OpJournal over the
+        # same dir reloads them); the cache only assumes no SECOND writer
+        # mutates the directory behind this instance's back.
+        self._cache: Optional[dict[int, dict]] = None
+
+    # ------------------------------------------------------------------ files
+    def _path(self, seq: int) -> str:
+        return os.path.join(self.dir, f"op_{seq:08d}.json")
+
+    def _max_seq(self) -> int:
+        mx = 0
+        for fn in os.listdir(self.dir):
+            if fn.startswith("op_") and fn.endswith(".json"):
+                try:
+                    mx = max(mx, int(fn[3:-5]))
+                except ValueError:
+                    pass
+        return mx
+
+    def _load(self) -> dict[int, dict]:
+        if self._cache is None:
+            cache: dict[int, dict] = {}
+            for fn in sorted(os.listdir(self.dir)):
+                if fn.startswith("op_") and fn.endswith(".json"):
+                    with open(os.path.join(self.dir, fn)) as f:
+                        e = json.load(f)
+                    cache[e["seq"]] = e
+            self._cache = cache
+        return self._cache
+
+    def _write(self, entry: dict) -> None:
+        p = self._path(entry["seq"])
+        tmp = p + ".part"
+        with open(tmp, "w") as f:
+            json.dump(entry, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, p)
+        _fsync_dir(self.dir)
+        self._load()[entry["seq"]] = copy.deepcopy(entry)
+
+    # ------------------------------------------------------------------ WAL
+    def begin(self, op: str, tenant: str,
+              vf_id: Optional[str] = None, **details) -> int:
+        """Log the intent to run ``op`` on ``tenant``; returns the entry
+        seq. Must be called after validation but BEFORE the first
+        mutation, so a rejected op never leaves a pending entry."""
+        if op not in JOURNALED_OPS:
+            raise JournalError(f"unknown journaled op {op!r}")
+        self._seq += 1
+        entry = {"seq": self._seq, "op": op, "tenant": tenant,
+                 "vf_id": vf_id, "status": PENDING, "details": details}
+        self._write(entry)
+        return self._seq
+
+    def _resolve(self, seq: int, status: str, **extra) -> None:
+        entry = self.read(seq)
+        if entry["status"] != PENDING:
+            raise JournalError(
+                f"entry {seq} already {entry['status']}, cannot {status}")
+        entry["status"] = status
+        entry["details"].update(extra)
+        self._write(entry)
+
+    def commit(self, seq: int, **extra) -> None:
+        self._resolve(seq, COMMITTED, **extra)
+
+    def abort(self, seq: int, **extra) -> None:
+        """Mark an entry rolled back (state returned to the pre-op one)."""
+        self._resolve(seq, ABORTED, **extra)
+
+    # ------------------------------------------------------------------ read
+    def read(self, seq: int) -> dict:
+        e = self._load().get(seq)
+        if e is None:
+            raise JournalError(f"no journal entry {seq}")
+        return copy.deepcopy(e)
+
+    def entries(self) -> list[dict]:
+        """All entries in begin (seq) order; ``*.part`` files ignored.
+        Returns defensive copies — use ``iter_entries`` in hot read-only
+        paths (the invariant checker replays the journal after every op)."""
+        return [copy.deepcopy(e) for e in self.iter_entries()]
+
+    def iter_entries(self):
+        """Entries in seq order WITHOUT copying — read-only: mutating a
+        yielded dict corrupts the cache."""
+        return sorted(self._load().values(), key=lambda e: e["seq"])
+
+    def pending(self) -> list[dict]:
+        return [copy.deepcopy(e) for e in self.iter_entries()
+                if e["status"] == PENDING]
+
+    def sweep_parts(self) -> int:
+        """Remove torn ``*.part`` files left by a crash mid-write."""
+        n = 0
+        for fn in os.listdir(self.dir):
+            if fn.endswith(".part"):
+                os.remove(os.path.join(self.dir, fn))
+                n += 1
+        return n
+
+    def compact(self, keep: int = 0) -> int:
+        """Drop resolved entries (all but the newest ``keep``); pending
+        entries are never dropped. Returns how many were removed.
+
+        NOT called automatically: invariant I8 replays the committed
+        history to predict live tenant statuses, so compaction is an
+        explicit operator/offline action (a manager that compacts must
+        accept a weaker I8 over the dropped prefix)."""
+        resolved = [e for e in self.entries() if e["status"] != PENDING]
+        drop = resolved[:-keep] if keep else resolved
+        for e in drop:
+            os.remove(self._path(e["seq"]))
+            self._load().pop(e["seq"], None)
+        return len(drop)

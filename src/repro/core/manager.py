@@ -27,9 +27,11 @@ from typing import Optional, Sequence
 import jax
 
 from repro.configs.base import RunConfig
+from repro.core.fault import InjectedCrash, crashpoint
+from repro.core.journal import OpJournal, PENDING
 from repro.core.pool import DevicePool, PoolError
-from repro.core.pause import (PhaseTimings, pause_vf, pause_vf_live,
-                              unpause_vf)
+from repro.core.pause import (PauseError, PhaseTimings, validate_pausable,
+                              pause_vf, pause_vf_live, unpause_vf)
 from repro.core.records import RecordStore
 from repro.core.scheduler import (PlacementRequest, Scheduler,
                                   make_scheduler)
@@ -40,16 +42,32 @@ from repro.core.vf import VFState, VirtualFunction
 from repro.checkpoint.store import CheckpointStore
 
 
+class ManagerError(RuntimeError):
+    """Typed manager-level rejection (the base the sim harness accepts)."""
+
+
+class UnknownTenantError(ManagerError):
+    """Operation names a tenant the manager holds no state for (e.g.
+    unpause of a tenant with no RAM snapshot). Typed so the sim harness
+    never has to treat a blanket ``KeyError`` as an expected rejection."""
+
+
 class SVFFManager:
     def __init__(self, pool: DevicePool, *,
                  staging: Optional[StagingEngine] = None,
                  workdir: str = "/tmp/svff",
                  pause_enabled: bool = True,
-                 scheduler: "Scheduler | str | None" = None):
+                 scheduler: "Scheduler | str | None" = None,
+                 records: Optional[RecordStore] = None,
+                 journal: Optional[OpJournal] = None):
         self.pool = pool
         self.staging = staging or StagingEngine()
         self.pause_enabled = pause_enabled
-        self.records = RecordStore(os.path.join(workdir, "records"))
+        self.workdir = workdir
+        self.records = records or RecordStore(os.path.join(workdir,
+                                                           "records"))
+        self.journal = journal or OpJournal(os.path.join(workdir,
+                                                         "journal"))
         self.detach_store_dir = os.path.join(workdir, "detached")
         self.tenants: dict[str, Tenant] = {}
         self.snapshots: dict[str, ConfigSpaceSnapshot] = {}   # RAM (paused)
@@ -58,6 +76,22 @@ class SVFFManager:
             scheduler = make_scheduler(scheduler)
         # None -> resolve per attach from the tenant's RunConfig.placement
         self.scheduler: Optional[Scheduler] = scheduler
+
+    # ------------------------------------------------------------- WAL helper
+    def _resolve_failed(self, seq: int) -> None:
+        """Inline self-heal for a CLEAN (non-crash) failure between
+        ``journal.begin`` and ``journal.commit`` on a live manager: the
+        pending intent is reconciled with exactly the recovery logic a
+        restarted manager would apply (roll forward if the destructive
+        step ran, back otherwise), so no pending entry ever outlives the
+        op and I8 holds without requiring a restart. Never masks the
+        original exception."""
+        try:
+            e = self.journal.read(seq)
+            if e["status"] == PENDING:
+                self._recover_entry(e, self.snapshots)
+        except Exception:
+            pass
 
     # ------------------------------------------------------------------ attach
     def _scheduler_for(self, tenant: Tenant) -> Scheduler:
@@ -102,23 +136,38 @@ class SVFFManager:
             store = CheckpointStore(self.detach_store_dir)
             step = self._detached_steps(store).get(tenant.tid)
             if step is not None:
-                # restore from the disk snapshot the detach wrote
+                # restore from the disk snapshot the detach wrote (read-
+                # only preparation: a corrupt snapshot must fail BEFORE
+                # the WAL entry exists, so the failure stays a clean,
+                # I8-preserving rejection)
                 shardings = tenant.shardings_for(vf)
                 like = tenant.state_template()
                 state = store.restore(step, like, shardings)
                 meta = store.metadata(step)
                 tenant.steps_done = meta.get("steps_done",
                                              tenant.steps_done)
-        compile_s = tenant.bind(vf, state=state)
-        vf.owner = tenant.tid
-        vf.transition(VFState.ATTACHED)
-        self.tenants[tenant.tid] = tenant
-        t.add("bind", time.perf_counter() - t0)
-        t.add("compile", compile_s)
+        # WAL: every check passed — log the intent before the first mutation
+        entry = self.journal.begin("attach", tenant.tid, vf_id=vf.vf_id)
+        try:
+            compile_s = tenant.bind(vf, state=state)
+            vf.owner = tenant.tid
+            vf.transition(VFState.ATTACHED)
+            self.tenants[tenant.tid] = tenant
+            t.add("bind", time.perf_counter() - t0)
+            t.add("compile", compile_s)
 
-        t0 = time.perf_counter()
-        self.records.write(tenant.tid, vf.describe(), tenant.run.model.name)
-        t.add("record", time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            self.records.write(tenant.tid, vf.describe(),
+                               tenant.run.model.name)
+            t.add("record", time.perf_counter() - t0)
+            self.journal.commit(entry)
+        except InjectedCrash:
+            raise                      # a crash leaves the intent pending
+        except Exception:
+            # clean failure (e.g. compile error): self-heal the intent —
+            # rolled back if bind never completed, forward otherwise
+            self._resolve_failed(entry)
+            raise
         return t
 
     def _detached_steps(self, store: Optional[CheckpointStore] = None
@@ -143,41 +192,70 @@ class SVFFManager:
             raise PoolError(
                 f"cannot detach {tenant.tid}: {vf.vf_id} is "
                 f"{vf.state.value} (owner {vf.owner})")
-        t0 = time.perf_counter()
-        state = tenant.export_state()
-        payload = self.staging.save(state, tenant=tenant.tid)
-        self._detach_counter += 1
-        store = CheckpointStore(self.detach_store_dir, keep=0)
-        store.save(self._detach_counter, payload,
-                   metadata={"tenant_id": tenant.tid,
-                             "steps_done": tenant.steps_done})
-        t.add("snapshot_disk", time.perf_counter() - t0)
+        # WAL: record the intent (and the disk-snapshot step it will use,
+        # so a rollback can delete the orphan) before the first write
+        entry = self.journal.begin("detach", tenant.tid, vf_id=vf.vf_id,
+                                   step=self._detach_counter + 1)
+        try:
+            t0 = time.perf_counter()
+            state = tenant.export_state()
+            payload = self.staging.save(state, tenant=tenant.tid)
+            self._detach_counter += 1
+            store = CheckpointStore(self.detach_store_dir, keep=0)
+            store.save(self._detach_counter, payload,
+                       metadata={"tenant_id": tenant.tid,
+                                 "steps_done": tenant.steps_done})
+            t.add("snapshot_disk", time.perf_counter() - t0)
+            # crash window: disk snapshot written, guest still bound —
+            # recovery rolls BACK (delete the orphan, tenant keeps running)
+            crashpoint("after_detach_snapshot")
 
-        t0 = time.perf_counter()
-        for leaf in jax.tree.leaves(state):
-            try:
-                leaf.delete()
-            except Exception:
-                pass
-        tenant.detach()
-        vf.owner = None
-        vf.emulated.clear()
-        # NOTE: unlike pause, detach does NOT release devices — the VF
-        # still exists on the bus with its resources (SR-IOV semantics);
-        # only set_num_vfs / pause change device ownership.
-        vf.transition(VFState.DETACHED)
-        self.records.remove(tenant.tid)
-        # the staging memo's device refs are dead after unbind; drop them so
-        # the memo stays bounded across tenant churn
-        self.staging.clear(tenant.tid)
-        t.add("unbind", time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            for leaf in jax.tree.leaves(state):
+                try:
+                    leaf.delete()
+                except Exception:
+                    pass
+            tenant.detach()
+            vf.owner = None
+            vf.emulated.clear()
+            # NOTE: unlike pause, detach does NOT release devices — the VF
+            # still exists on the bus with its resources (SR-IOV
+            # semantics); only set_num_vfs / pause change device ownership.
+            vf.transition(VFState.DETACHED)
+            # crash window: unbind complete but the attach record still on
+            # disk — recovery rolls FORWARD (remove the record, commit)
+            crashpoint("after_unbind")
+            self.records.remove(tenant.tid)
+            # the staging memo's device refs are dead after unbind; drop
+            # them so the memo stays bounded across tenant churn
+            self.staging.clear(tenant.tid)
+            t.add("unbind", time.perf_counter() - t0)
+            self.journal.commit(entry)
+        except InjectedCrash:
+            raise                      # a crash leaves the intent pending
+        except Exception:
+            self._resolve_failed(entry)
+            raise
         return t
 
     # ------------------------------------------------------------------ pause
     def pause(self, tenant: Tenant) -> PhaseTimings:
         vf = self.pool.find(tenant.vf_id)
-        snap, t = pause_vf(self.pool, vf, tenant, self.staging)
-        self.snapshots[tenant.tid] = snap        # held in host RAM
+        validate_pausable(vf, tenant)           # reject BEFORE the WAL entry
+        entry = self.journal.begin("pause", tenant.tid, vf_id=vf.vf_id)
+        try:
+            # the sink registers the snapshot in host RAM before the
+            # destructive suspend, which is what makes mid-pause crashes
+            # recoverable (see core/pause.py)
+            snap, t = pause_vf(self.pool, vf, tenant, self.staging,
+                               sink=self.snapshots)
+            self.journal.commit(entry)
+        except InjectedCrash:
+            raise
+        except Exception:
+            self._resolve_failed(entry)
+            raise
         return t
 
     def pause_live(self, tenant: Tenant, *, rounds: int = 2,
@@ -187,9 +265,18 @@ class SVFFManager:
         concurrent work); only the final stop-and-copy — ``t.stop_ms`` —
         stalls it."""
         vf = self.pool.find(tenant.vf_id)
-        snap, t = pause_vf_live(self.pool, vf, tenant, self.staging,
-                                rounds=rounds, step_fn=step_fn)
-        self.snapshots[tenant.tid] = snap        # held in host RAM
+        validate_pausable(vf, tenant)
+        entry = self.journal.begin("pause_live", tenant.tid, vf_id=vf.vf_id)
+        try:
+            snap, t = pause_vf_live(self.pool, vf, tenant, self.staging,
+                                    rounds=rounds, step_fn=step_fn,
+                                    sink=self.snapshots)
+            self.journal.commit(entry)
+        except InjectedCrash:
+            raise
+        except Exception:
+            self._resolve_failed(entry)
+            raise
         return t
 
     def unpause(self, tenant: Tenant, vf_id: Optional[str] = None,
@@ -197,13 +284,29 @@ class SVFFManager:
         # the RAM snapshot is the paused tenant's ONLY state copy — drop
         # it only after the unpause fully succeeded, so a failed unpause
         # (bad vf_id, no free devices) stays retryable
+        if tenant.tid not in self.snapshots:
+            raise UnknownTenantError(
+                f"cannot unpause {tenant.tid}: no RAM snapshot "
+                f"(status {getattr(tenant, 'status', '?')})")
         snap = self.snapshots[tenant.tid]
         vf = (self.pool.find(vf_id) if vf_id
               else self.pool.find(tenant.vf_id))
-        t = unpause_vf(self.pool, vf, tenant, snap, self.staging,
-                       num_devices=num_devices)
-        vf.owner = tenant.tid
-        del self.snapshots[tenant.tid]
+        if vf.state != VFState.PAUSED:
+            raise PauseError(f"{vf.vf_id} is not paused")
+        entry = self.journal.begin("unpause", tenant.tid, vf_id=vf.vf_id)
+        try:
+            t = unpause_vf(self.pool, vf, tenant, snap, self.staging,
+                           num_devices=num_devices)
+            vf.owner = tenant.tid
+            del self.snapshots[tenant.tid]
+            self.journal.commit(entry)
+        except InjectedCrash:
+            raise
+        except Exception:
+            # clean rejection/failure (e.g. no free devices): self-heal
+            # the intent so the op stays retryable with the snapshot kept
+            self._resolve_failed(entry)
+            raise
         return t
 
     # ------------------------------------------------------------------ init
@@ -275,14 +378,30 @@ class SVFFManager:
     # --------------------------------------------------------- fault tolerance
     def migrate(self, tenant: Tenant) -> dict:
         """Straggler/failure mitigation: move a tenant to fresh devices via
-        pause -> release -> allocate elsewhere -> unpause."""
+        pause -> release -> allocate elsewhere -> unpause. The migrate
+        itself is journaled, and its pause/unpause halves journal their
+        own entries — so a crash mid-migrate recovers the inner op first,
+        then resolves the migrate (forward if the tenant came back running,
+        rolled back to a clean paused state otherwise)."""
         t0 = time.perf_counter()
         vf = self.pool.find(tenant.vf_id)
-        n = vf.num_devices
-        self.pause(tenant)
-        # prefer devices not in the old slice
-        self.pool.allocate(vf, n)
-        self.unpause(tenant)
+        validate_pausable(vf, tenant)
+        entry = self.journal.begin("migrate", tenant.tid, vf_id=vf.vf_id)
+        try:
+            n = vf.num_devices
+            old = tuple(vf.devices)
+            self.pause(tenant)
+            # prefer devices not in the old (possibly sick) slice
+            self.pool.allocate(vf, n, avoid=old)
+            self.unpause(tenant)
+            self.journal.commit(entry)
+        except InjectedCrash:
+            raise
+        except Exception:
+            # inner ops self-heal their own entries first; the migrate
+            # intent then resolves against wherever the tenant landed
+            self._resolve_failed(entry)
+            raise
         return {"migrate_s": time.perf_counter() - t0,
                 "new_devices": [str(d) for d in vf.devices]}
 
@@ -292,5 +411,188 @@ class SVFFManager:
                 "paused_snapshots": {k: v.describe()
                                      for k, v in self.snapshots.items()},
                 "pause_enabled": self.pause_enabled,
+                "journal_pending": len(self.journal.pending()),
                 "scheduler": (self.scheduler.describe() if self.scheduler
                               else {"policy": "per-tenant"})}
+
+    # ------------------------------------------------------------- recovery
+    @classmethod
+    def recover(cls, journal: "OpJournal | str", pool: DevicePool,
+                records: "RecordStore | str",
+                staging: Optional[StagingEngine] = None, *,
+                tenants: Optional[dict] = None,
+                snapshots: Optional[dict] = None,
+                workdir: Optional[str] = None,
+                pause_enabled: bool = True,
+                scheduler: "Scheduler | str | None" = None
+                ) -> "SVFFManager":
+        """Rebuild a manager after the previous one died mid-operation.
+
+        What survives a manager crash — and is therefore handed in — is
+        exactly what lives OUTSIDE the manager process: the journal and
+        attach records on disk, the device pool (bus state), the guest
+        ``tenants`` themselves, and the host-RAM ``snapshots`` table the
+        pause path registers into before suspending. Recovery:
+
+          1. sweeps crash debris (``*.part`` files, torn checkpoint tmp
+             dirs) and drops every staging memo (device refs are dead);
+          2. reconciles each PENDING journal entry newest-first against
+             the surviving state, rolling the op FORWARD when its
+             destructive step already happened (suspend done, unbind done,
+             restore done) and BACK otherwise, then resolves the entry;
+          3. adopts the surviving tenants/snapshots and re-derives
+             counters (detach step numbering) from disk.
+
+        The result satisfies invariants I1-I9; calling ``recover`` again
+        on it is a no-op (I9: recovery idempotence).
+        """
+        if isinstance(records, str):
+            records = RecordStore(records)
+        if isinstance(journal, str):
+            journal = OpJournal(journal)
+        workdir = workdir or os.path.dirname(records.dir.rstrip(os.sep))
+        staging = staging or StagingEngine()
+        mgr = cls(pool, staging=staging, workdir=workdir,
+                  pause_enabled=pause_enabled, scheduler=scheduler,
+                  records=records, journal=journal)
+
+        # -- 1. sweep crash debris; a fresh process holds no device memos
+        staging.clear()
+        records.sweep_parts()
+        journal.sweep_parts()
+        store = CheckpointStore(mgr.detach_store_dir, keep=0)
+        store.sweep_tmp()
+
+        # -- 2. adopt survivors (resolution below may mutate them)
+        tenants = dict(tenants or {})
+        snapshots = dict(snapshots) if snapshots is not None else {}
+        mgr.tenants = {
+            tid: tn for tid, tn in tenants.items()
+            if getattr(tn, "status", None) in ("running", "paused",
+                                               "detached")}
+
+        # -- 3. reconcile pending intents, newest first (inner ops of a
+        # compound op like migrate resolve before the compound entry)
+        for e in reversed(journal.pending()):
+            mgr._recover_entry(e, snapshots)
+
+        # -- 4. final state: snapshots table is exactly the paused tenants
+        mgr.snapshots = {
+            tid: s for tid, s in snapshots.items()
+            if getattr(mgr.tenants.get(tid), "status", None) == "paused"}
+        mgr._detach_counter = max(store.steps(), default=0)
+        return mgr
+
+    def _recover_entry(self, e: dict, snapshots: dict) -> None:
+        """Roll one pending journal entry forward or back. The decision is
+        read off the surviving state: if the op's destructive step already
+        ran (the guest was suspended / unbound / its VF re-attached), the
+        op completes; otherwise it never happened."""
+        op, tid, vf_id = e["op"], e["tenant"], e.get("vf_id")
+        seq = e["seq"]
+        tn = self.tenants.get(tid)
+        vf = self.pool.vfs.get(vf_id) if vf_id else None
+        status = getattr(tn, "status", None)
+
+        if op == "attach":
+            bound = (status == "running" and vf is not None
+                     and getattr(tn, "vf_id", None) == vf.vf_id)
+            if bound:
+                # bind completed; the pool update and/or record may be
+                # missing — finish them (forward), idempotently
+                if vf.owner is None:
+                    vf.owner = tid
+                if vf.state == VFState.DETACHED:
+                    vf.transition(VFState.ATTACHED)
+                self.records.write(tid, vf.describe(), tn.run.model.name)
+                self.journal.commit(seq, recovered="forward")
+            else:
+                # bind never ran — nothing to undo beyond a stray record
+                self.records.remove(tid)
+                self.journal.abort(seq, recovered="rollback")
+
+        elif op == "detach":
+            if status == "detached":
+                # unbind done: finish by dropping the record + memo
+                self.records.remove(tid)
+                self.staging.clear(tid)
+                self.journal.commit(seq, recovered="forward")
+            else:
+                # guest still bound: delete the orphan disk snapshot
+                # (complete or torn) the failed detach may have written
+                store = CheckpointStore(self.detach_store_dir, keep=0)
+                step = e["details"].get("step")
+                if step is not None:
+                    store.remove(step)
+                store.sweep_tmp()
+                self.staging.clear(tid)
+                self.journal.abort(seq, recovered="rollback")
+
+        elif op in ("pause", "pause_live"):
+            if status == "paused":
+                # suspend ran: the registered snapshot is now the only
+                # state copy — roll forward to a fully-paused VF
+                if tid not in snapshots:
+                    raise RuntimeError(
+                        f"recovery: {tid} suspended but no snapshot "
+                        "registered (unrecoverable)")
+                if vf is not None:
+                    if vf.state == VFState.ATTACHED:
+                        vf.transition(VFState.PAUSED)
+                    if vf.devices:
+                        vf.release_devices()
+                    vf.emulated["status"] = "paused"
+                    vf.emulated["steps_done"] = tn.steps_done
+                self.staging.clear(tid)
+                self.journal.commit(seq, recovered="forward")
+            else:
+                # guest untouched: drop the half-taken snapshot + memo
+                snapshots.pop(tid, None)
+                self.staging.clear(tid)
+                self.journal.abort(seq, recovered="rollback")
+
+        elif op == "unpause":
+            if status == "running":
+                # fully resumed; only the bookkeeping commit was lost
+                snapshots.pop(tid, None)
+                if vf is not None:
+                    vf.owner = tid
+                self.journal.commit(seq, recovered="forward")
+            elif status == "paused" and vf is not None:
+                if vf.state == VFState.PAUSED:
+                    # restore never ran — roll back: devices (if any were
+                    # re-allocated) return to the pool, snapshot retained
+                    if vf.devices:
+                        vf.release_devices()
+                    self.journal.abort(seq, recovered="rollback")
+                else:
+                    # VF re-attached but guest not resumed — roll forward:
+                    # redo the restore from the retained snapshot
+                    snap = snapshots.get(tid)
+                    if snap is None:
+                        raise RuntimeError(
+                            f"recovery: {tid} mid-unpause but no snapshot "
+                            "registered (unrecoverable)")
+                    state = self.staging.restore(snap.payload,
+                                                 tn.shardings_for(vf))
+                    tn.steps_done = snap.steps_done
+                    tn.resume(state, vf)
+                    vf.owner = tid
+                    vf.emulated["status"] = "running"
+                    snapshots.pop(tid, None)
+                    self.journal.commit(seq, recovered="forward")
+            else:
+                self.journal.abort(seq, recovered="rollback")
+
+        elif op == "migrate":
+            # inner pause/unpause entries were reconciled first (newest-
+            # first order), so the tenant is already in a clean state:
+            # running -> the migrate completed; paused -> it stalled after
+            # the pause half, which is a clean (resumable) rollback point
+            if status == "running":
+                self.journal.commit(seq, recovered="forward")
+            else:
+                self.journal.abort(seq, recovered="rollback")
+
+        else:                                     # unknown op: never applied
+            self.journal.abort(seq, recovered="rollback")

@@ -34,6 +34,7 @@ from typing import Callable, Optional
 
 import jax
 
+from repro.core.fault import crashpoint
 from repro.core.pool import DevicePool
 from repro.core.snapshot import ConfigSpaceSnapshot, serialize_specs
 from repro.core.staging import StagingEngine
@@ -71,7 +72,7 @@ class PauseError(RuntimeError):
     pass
 
 
-def _validate_pausable(vf: VirtualFunction, tenant: Tenant):
+def validate_pausable(vf: VirtualFunction, tenant: Tenant):
     if vf.state != VFState.ATTACHED or vf.owner != tenant.tid:
         raise PauseError(f"{vf.vf_id} not attached to {tenant.tid}")
     if not vf.pausable:
@@ -81,10 +82,17 @@ def _validate_pausable(vf: VirtualFunction, tenant: Tenant):
 def _stop_and_copy(vf: VirtualFunction, tenant: Tenant,
                    staging: StagingEngine, t: PhaseTimings, *,
                    incremental: Optional[bool] = None,
-                   precopy_rounds: int = 0) -> ConfigSpaceSnapshot:
+                   precopy_rounds: int = 0,
+                   sink: Optional[dict] = None) -> ConfigSpaceSnapshot:
     """The tenant-visible part of every pause: save config space, then the
     paper's unregister steps. With a warm pre-copy memo the save moves only
-    dirty leaves, which is what shrinks ``stop_ms``."""
+    dirty leaves, which is what shrinks ``stop_ms``.
+
+    ``sink`` (the manager's host-RAM snapshot table) is populated BEFORE
+    the destructive suspend: from that moment on the snapshot is the
+    tenant's second state copy, so a crash after ``tenant.suspend()`` can
+    always be rolled forward from it (crash-consistency; see
+    ``SVFFManager.recover``)."""
     # -- step 1: save config space (+ MSI state) ---------------------------
     t0 = time.perf_counter()
     state = tenant.export_state()
@@ -98,7 +106,12 @@ def _stop_and_copy(vf: VirtualFunction, tenant: Tenant,
         exec_keys=list(tenant._exec_cache.keys()),
         stats=staging.last_stats, compressed=staging.compression != "none",
         precopy_rounds=precopy_rounds)
+    if sink is not None:
+        sink[tenant.tid] = snap
     t.add("save_config_space", time.perf_counter() - t0)
+    # crash window: snapshot registered, tenant still running untouched —
+    # recovery rolls the pause BACK (drop the snapshot, nothing else moved)
+    crashpoint("after_snapshot_register")
 
     # -- step 2: unregister PCI ops (guest keeps emulated view) -------------
     t0 = time.perf_counter()
@@ -106,6 +119,9 @@ def _stop_and_copy(vf: VirtualFunction, tenant: Tenant,
     vf.emulated["status"] = "paused"
     vf.emulated["steps_done"] = tenant.steps_done
     t.add("unregister_pci", time.perf_counter() - t0)
+    # crash window: tenant suspended but the VF still ATTACHED holding its
+    # devices — recovery rolls the pause FORWARD from the registered snap
+    crashpoint("after_suspend")
 
     # -- step 3: unregister VFIO / exit IOMMU group --------------------------
     t0 = time.perf_counter()
@@ -123,17 +139,19 @@ def _stop_and_copy(vf: VirtualFunction, tenant: Tenant,
 
 
 def pause_vf(pool: DevicePool, vf: VirtualFunction, tenant: Tenant,
-             staging: StagingEngine) -> tuple[ConfigSpaceSnapshot,
-                                              PhaseTimings]:
+             staging: StagingEngine,
+             sink: Optional[dict] = None) -> tuple[ConfigSpaceSnapshot,
+                                                   PhaseTimings]:
     t = PhaseTimings()
-    _validate_pausable(vf, tenant)
-    snap = _stop_and_copy(vf, tenant, staging, t)
+    validate_pausable(vf, tenant)
+    snap = _stop_and_copy(vf, tenant, staging, t, sink=sink)
     return snap, t
 
 
 def pause_vf_live(pool: DevicePool, vf: VirtualFunction, tenant: Tenant,
                   staging: StagingEngine, *, rounds: int = 2,
-                  step_fn: Optional[Callable[[], None]] = None
+                  step_fn: Optional[Callable[[], None]] = None,
+                  sink: Optional[dict] = None
                   ) -> tuple[ConfigSpaceSnapshot, PhaseTimings]:
     """Pre-copy live pause. ``rounds`` background snapshot rounds run while
     the tenant keeps working (``step_fn`` is the tenant's own stepping,
@@ -144,17 +162,20 @@ def pause_vf_live(pool: DevicePool, vf: VirtualFunction, tenant: Tenant,
     is just ``pause_vf``, and would trip invariant I7's
     "live pause ran no background pre-copy" check."""
     t = PhaseTimings()
-    _validate_pausable(vf, tenant)
+    validate_pausable(vf, tenant)
     rounds = max(1, rounds)
     for r in range(rounds):
         t0 = time.perf_counter()
         staging.save(tenant.export_state(), tenant=tenant.tid,
                      incremental=True)
         t.add(f"precopy_{r}", time.perf_counter() - t0, stop=False)
+        # crash window: a pre-copy round landed in the memo, nothing
+        # guest-visible moved — recovery discards the memo and rolls back
+        crashpoint("mid_precopy_round")
         if step_fn is not None:
             step_fn()             # tenant work: not part of the pause at all
     snap = _stop_and_copy(vf, tenant, staging, t, incremental=True,
-                          precopy_rounds=rounds)
+                          precopy_rounds=rounds, sink=sink)
     return snap, t
 
 
@@ -170,10 +191,16 @@ def unpause_vf(pool: DevicePool, vf: VirtualFunction, tenant: Tenant,
     if not vf.devices:
         import math
         pool.allocate(vf, num_devices or math.prod(snap.mesh_shape))
+    # crash window: devices (re)allocated but nothing restored — recovery
+    # rolls BACK (release the devices, keep the snapshot, stay paused)
+    crashpoint("before_unpause_restore")
     shardings = tenant.shardings_for(vf)
     state = staging.restore(snap.payload, shardings)
     jax.block_until_ready(state)
     vf.transition(VFState.ATTACHED)
+    # crash window: VF back to ATTACHED but the tenant not yet resumed —
+    # recovery rolls FORWARD (redo the restore from the retained snapshot)
+    crashpoint("after_unpause_restore")
     t.add("restore_io", time.perf_counter() - t0)
 
     # -- step 2: restore config registers --------------------------------------

@@ -131,13 +131,19 @@ class DevicePool:
         used = {d for vf in self.vfs.values() for d in vf.devices}
         return [d for d in self.devices if d not in used]
 
-    def allocate(self, vf: VirtualFunction, num: int):
+    def allocate(self, vf: VirtualFunction, num: int,
+                 avoid: Sequence = ()):
         """(Re)assign ``num`` free devices to a VF (unpause onto a possibly
-        different slice)."""
+        different slice). ``avoid`` devices are used only as a last resort
+        — migration passes the sick slice here so the tenant actually
+        lands elsewhere whenever the pool allows it."""
         free = self.free_devices()
         if len(free) < num:
             raise PoolError(f"need {num} devices, only {len(free)} free")
-        vf.assign_devices(free[:num], _default_mesh_shape(num))
+        avoided = set(avoid)
+        ordered = ([d for d in free if d not in avoided]
+                   + [d for d in free if d in avoided])
+        vf.assign_devices(ordered[:num], _default_mesh_shape(num))
         self._check_invariants()
 
     def find(self, vf_id: str) -> VirtualFunction:

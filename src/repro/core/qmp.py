@@ -18,6 +18,7 @@ import socket
 import threading
 from typing import Callable, Optional
 
+from repro.core.fault import InjectedCrash, crashpoint
 from repro.core.manager import SVFFManager
 from repro.core.tenant import DevicePausedError
 
@@ -91,7 +92,15 @@ class ControlPlane:
             return {"error": {"class": "CommandNotFound",
                               "desc": f"unknown command {cmd!r}"}}
         try:
-            return {"return": self._commands[cmd](args)}
+            ret = self._commands[cmd](args)
+            # crash window: the command ran but the monitor dies before the
+            # response leaves — the client sees a timeout; every journaled
+            # mutation is already committed, so recovery has nothing to do
+            # and an idempotent re-query observes the applied state
+            crashpoint("qmp_timeout")
+            return {"return": ret}
+        except InjectedCrash:
+            raise          # chaos: the monitor dies, no error response
         except (QMPError, DevicePausedError, KeyError, RuntimeError) as e:
             return {"error": {"class": type(e).__name__, "desc": str(e)}}
 

@@ -16,6 +16,7 @@ import os
 import time
 from typing import Optional
 
+from repro.core.fault import crashpoint
 from repro.core.pool import DevicePool
 
 
@@ -43,7 +44,13 @@ class RecordStore:
         tmp = p + ".part"
         with open(tmp, "w") as f:
             json.dump(rec, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        # crash window: the .part file exists but the record does not —
+        # reads ignore it, recovery sweeps it and rolls the op forward
+        crashpoint("mid_record_write")
         os.replace(tmp, p)
+        crashpoint("after_record_write")
         return p
 
     def read(self, tenant_id: str) -> dict:
@@ -54,13 +61,29 @@ class RecordStore:
             return json.load(f)
 
     def remove(self, tenant_id: str):
+        """Idempotent: removing a missing record is a no-op (recovery may
+        replay a detach whose record removal already happened)."""
         p = self._path(tenant_id)
         if os.path.exists(p):
             os.remove(p)
 
     def list(self) -> list[str]:
+        """Attached tenants by record file; ``*.part`` staging files from
+        an interrupted write are never visible here."""
         return sorted(f[:-5] for f in os.listdir(self.dir)
                       if f.endswith(".json"))
+
+    def part_files(self) -> list[str]:
+        """Leftover ``*.part`` staging files (crash debris)."""
+        return sorted(f for f in os.listdir(self.dir)
+                      if f.endswith(".part"))
+
+    def sweep_parts(self) -> int:
+        """Remove crash debris; returns how many files were swept."""
+        parts = self.part_files()
+        for fn in parts:
+            os.remove(os.path.join(self.dir, fn))
+        return len(parts)
 
     def validate(self, tenant_id: str, pool: DevicePool) -> dict:
         """Attach-path re-validation (device id / driver name checks)."""

@@ -59,6 +59,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.core.fault import crashpoint
+
 _GLOBAL = "__global__"
 
 
@@ -285,6 +287,11 @@ class StagingEngine:
         logical = skipped = 0
         descs: list[_Descriptor] = []
         digests: dict[int, Any] = {}    # leaf idx -> digest computed at miss
+        # transactional publication: memo writes are BUFFERED here and
+        # committed only once the whole snapshot is assembled — a crash
+        # mid-save (InjectedCrash or real) leaves the memo, and therefore
+        # every future incremental save, exactly as before this save
+        memo_puts: list = []            # (key, x, host, digest)
 
         # -- stage -1: pre-dispatch digest kernels for identity misses so
         # they all run concurrently on device (finalized leaf-by-leaf in
@@ -313,8 +320,7 @@ class StagingEngine:
                 # buffer the tenant may later mutate in place
                 host = np.array(x)
                 host_flat[i] = host
-                self._memo_put(memo, key, x, host, incremental,
-                               digest=digests[i])
+                memo_puts.append((key, x, host, digests[i]))
                 continue
             descs.extend(self._dispatch_leaf(i, x, transport, kops))
 
@@ -322,6 +328,11 @@ class StagingEngine:
         bursts = self._balance(descs, max(1, min(self.num_queues,
                                                  len(descs) or 1)),
                                lambda d: d.nbytes)
+
+        # crash window: descriptors dispatched (and host leaves staged)
+        # but the D2H queues have not drained — the half-built snapshot
+        # and its buffered memo updates must never become observable
+        crashpoint("mid_pipeline_chunk")
 
         def fetch(burst):
             got = jax.device_get([d.dev for d in burst])
@@ -341,8 +352,12 @@ class StagingEngine:
             path, x = flat_p[i]
             host = self._assemble(x, sorted(ds, key=lambda d: d.chunk))
             host_flat[i] = host
-            self._memo_put(memo, jax.tree_util.keystr(path), x, host,
-                           incremental, digest=digests[i])
+            memo_puts.append((jax.tree_util.keystr(path), x, host,
+                              digests[i]))
+
+        # -- publish: the snapshot is complete, commit the memo updates ------
+        for key, x, host, dg in memo_puts:
+            self._memo_put(memo, key, x, host, incremental, digest=dg)
 
         dt = time.perf_counter() - t0
         moved = sum(_nbytes(h) for h in host_flat) - skipped
@@ -512,7 +527,8 @@ class StagingEngine:
             hit, dg = self._memo_hit(memo, key, x, incremental)
             if hit is not None:
                 skipped += _nbytes(hit)
-                return hit
+                return hit, None
+            crashpoint("mid_pipeline_chunk")
             if isinstance(x, jax.Array) and self._pack_eligible(x):
                 q, scale = kops.qdma_pack(x, block=self.block)
                 host = QuantizedLeaf(q=np.asarray(jax.device_get(q)),
@@ -520,12 +536,17 @@ class StagingEngine:
                                      dtype=str(x.dtype), block=self.block)
             else:
                 host = np.asarray(jax.device_get(x))
-            self._memo_put(memo, key, x, host, incremental, digest=dg)
-            return host
+            return host, (key, x, host, dg)
 
         # QDMA-style queues: round-robin leaves over transfer streams
         with cf.ThreadPoolExecutor(max_workers=self.num_queues) as ex:
-            host_flat = list(ex.map(fetch, flat_p))
+            fetched = list(ex.map(fetch, flat_p))
+        host_flat = [h for h, _ in fetched]
+        # transactional publication (see the pipelined save): memo commits
+        # only after every leaf crossed the link
+        for _, put in fetched:
+            if put is not None:
+                self._memo_put(memo, *put[:3], incremental, digest=put[3])
         dt = time.perf_counter() - t0
         moved = sum(_nbytes(x) for x in host_flat) - skipped
         self.last_stats = TransferStats(

@@ -15,11 +15,17 @@ Pieces
               (``generate_scenario``): same seed -> same op sequence
   tenant      ``SimTenant`` — numpy-state tenant whose state is a pure
               function of ``(seed, steps_done)``
-  invariants  ``check_invariants`` (I1-I5) + ``check_timings`` (I6),
-              asserted after every op — see its docstring for the list
+  invariants  ``check_invariants`` (I1-I5, I8) + ``check_timings`` (I6)
+              + ``check_pause_timings`` (I7), asserted after every op —
+              see its docstring for the list
+  chaos       crash-point catalogue (``CRASH_POINTS``), per-cell runner
+              (``run_crash_case``) and the full ``crash_matrix``; I9
+              (recovery idempotence) lives in ``recover_manager``
   harness     ``ScenarioRunner`` / ``run_scenario`` — executes a scenario,
               records per-op outcomes (ok / atomically rejected) and the
-              Table-II timing dict of every reconf
+              Table-II timing dict of every reconf; ``crash`` ops kill
+              the manager at a crash point and rebuild it via
+              ``SVFFManager.recover``
 
 Reproducing a failure
 ---------------------
@@ -33,6 +39,9 @@ op#<i>``. Replay it exactly with:
 + final tenant states); two runs of one seed always match, which the
 tests assert. See also ``src/repro/sim/README.md``.
 """
+from repro.sim.chaos import (CRASH_POINTS, CrashSpec, crash_matrix,
+                             recover_manager, run_crash_case,
+                             state_fingerprint)
 from repro.sim.clock import VirtualClock
 from repro.sim.harness import (OpResult, ScenarioResult, ScenarioRunner,
                                run_scenario)
@@ -43,9 +52,10 @@ from repro.sim.scenario import (Op, OP_KINDS, ScenarioConfig,
 from repro.sim.tenant import ServeSimTenant, SimTenant
 
 __all__ = [
-    "InvariantViolation", "Op", "OP_KINDS", "OpResult", "ScenarioConfig",
-    "ScenarioResult", "ScenarioRunner", "ServeSimTenant", "SimTenant",
-    "VirtualClock",
+    "CRASH_POINTS", "CrashSpec", "InvariantViolation", "Op", "OP_KINDS",
+    "OpResult", "ScenarioConfig", "ScenarioResult", "ScenarioRunner",
+    "ServeSimTenant", "SimTenant", "VirtualClock",
     "check_invariants", "check_pause_timings", "check_timings",
-    "generate_scenario", "run_scenario",
+    "crash_matrix", "generate_scenario", "recover_manager",
+    "run_crash_case", "run_scenario", "state_fingerprint",
 ]

@@ -1,0 +1,273 @@
+"""Chaos harness — crash-inject the manager, recover it, prove invariants.
+
+The paper's claim is that reconfiguration is transparent to guests; this
+module sharpens it to *crash-transparent*: the management plane may die at
+any of the named crash windows below and ``SVFFManager.recover`` must
+rebuild an invariant-clean manager from what survives (journal + records
+on disk, the device pool, the guests, the host-RAM snapshot table).
+
+``CRASH_POINTS`` is the catalogue. Each spec names the ops that can reach
+the window (``triggers``) and the recovery semantics the window commits
+the stack to:
+
+  outcome="none"      the op's destructive step had not run — recovery
+                      rolls it BACK; guest state is as if the op was
+                      never issued
+  outcome="complete"  the destructive step ran (suspend / unbind / VF
+                      re-attach) — recovery rolls it FORWARD; guest state
+                      is as if the op fully succeeded
+
+``run_crash_case(point, seed, policy)`` is the unit of the crash matrix:
+build a deterministic small system, drive it to where the trigger op is
+legal, arm the crash plane, catch the ``InjectedCrash``, recover — then
+assert invariants I1-I8, recovery idempotence (I9: a second ``recover``
+is a bit-identical no-op), the cataloged outcome, and post-recovery
+liveness (the survivors still pause/unpause/step with bit-identical
+state). ``crash_matrix`` sweeps points x seeds x policies; the CI chaos
+job runs it and ``benchmarks/crash_matrix.py`` writes the JSON artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import shutil
+import tempfile
+import zlib
+from typing import Iterable, Optional, Sequence
+
+from repro.core.fault import InjectedCrash, crash_plane
+from repro.core.journal import COMPLETED_STATUS as _COMPLETED_STATUS
+from repro.core.manager import SVFFManager
+from repro.core.pool import DevicePool
+from repro.core.qmp import ControlPlane
+from repro.core.staging import StagingEngine
+from repro.sim.clock import VirtualClock
+from repro.sim.invariants import InvariantViolation, check_invariants
+from repro.sim.tenant import SimTenant
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashSpec:
+    point: str
+    triggers: tuple                 # op kinds that can reach this window
+    outcome: str                    # "none" (rollback) | "complete"
+    doc: str
+
+
+CRASH_POINTS: dict[str, CrashSpec] = {s.point: s for s in (
+    CrashSpec("mid_record_write", ("attach",), "complete",
+              "record .part staged but not renamed; bind already done"),
+    CrashSpec("after_record_write", ("attach",), "complete",
+              "record durable, WAL commit lost"),
+    CrashSpec("mid_pipeline_chunk", ("pause", "pause_live", "detach"),
+              "none",
+              "staging descriptors partly across the link; snapshot "
+              "unpublished, memo untouched (transactional save)"),
+    CrashSpec("mid_precopy_round", ("pause_live",), "none",
+              "a pre-copy round landed in the memo; guest untouched"),
+    CrashSpec("after_snapshot_register", ("pause", "pause_live"), "none",
+              "snapshot in host RAM, guest not yet suspended"),
+    CrashSpec("after_suspend", ("pause", "pause_live"), "complete",
+              "guest suspended; snapshot is the only state copy"),
+    CrashSpec("after_detach_snapshot", ("detach",), "none",
+              "disk snapshot written, guest still bound"),
+    CrashSpec("after_unbind", ("detach",), "complete",
+              "guest unbound, attach record still on disk"),
+    CrashSpec("before_unpause_restore", ("unpause",), "none",
+              "devices re-allocated, nothing restored"),
+    CrashSpec("after_unpause_restore", ("unpause",), "complete",
+              "VF re-attached, guest not yet resumed"),
+    CrashSpec("qmp_timeout", ("qmp",), "none",
+              "command applied, monitor died before the response"),
+)}
+
+
+def state_fingerprint(mgr: SVFFManager) -> str:
+    """Deterministic digest of everything recovery reconstructs: pool,
+    tenants, snapshot table, records, journal entry resolutions. Two
+    managers with equal fingerprints are management-plane-identical."""
+    q = mgr.query()
+    blob = json.dumps(
+        [q["pool"], q["tenants"],
+         sorted((k, v) for k, v in q["paused_snapshots"].items()),
+         mgr.records.list(),
+         [(e["seq"], e["op"], e["tenant"], e["status"])
+          for e in mgr.journal.entries()]],
+        sort_keys=True, default=str)
+    return f"{zlib.crc32(blob.encode()):08x}"
+
+
+def recover_manager(mgr: SVFFManager, tenants: dict, *,
+                    policy: Optional[str] = None,
+                    workdir: Optional[str] = None,
+                    num_queues: int = 2,
+                    check_idempotent: bool = True) -> SVFFManager:
+    """Standard post-crash sequence: ``SVFFManager.recover`` from the dead
+    manager's survivable pieces, then (I9) assert a second recovery is a
+    bit-identical no-op."""
+    kw = dict(tenants=tenants, workdir=workdir or mgr.workdir,
+              scheduler=policy, pause_enabled=mgr.pause_enabled)
+    new = SVFFManager.recover(mgr.journal, mgr.pool, mgr.records,
+                              StagingEngine(num_queues=num_queues),
+                              snapshots=mgr.snapshots, **kw)
+    if check_idempotent:
+        fp1 = state_fingerprint(new)
+        again = SVFFManager.recover(new.journal, new.pool, new.records,
+                                    StagingEngine(num_queues=num_queues),
+                                    snapshots=new.snapshots, **kw)
+        fp2 = state_fingerprint(again)
+        if fp1 != fp2:
+            raise InvariantViolation(
+                f"I9 recovery not idempotent: {fp1} != {fp2}")
+        new = again
+    return new
+
+
+def _fire(mgr: SVFFManager, trigger: str, point: str,
+          victim: Optional[SimTenant]) -> int:
+    """Arm ``point``, run ``trigger``, and require the injected crash.
+    Returns how many live-pause background steps the victim took before
+    the crash (they count toward its expected step total)."""
+    stepped = [0]
+    crash_plane.arm(point)
+    try:
+        if trigger == "attach":
+            mgr.attach(victim)
+        elif trigger == "pause":
+            mgr.pause(victim)
+        elif trigger == "pause_live":
+            def _live_step():
+                victim.run_steps(1)
+                stepped[0] += 1
+            mgr.pause_live(victim, rounds=2, step_fn=_live_step)
+        elif trigger == "detach":
+            mgr.detach(victim)
+        elif trigger == "unpause":
+            mgr.unpause(victim)
+        elif trigger == "qmp":
+            ControlPlane(mgr).execute({"execute": "query-status"})
+        else:
+            raise ValueError(f"unknown crash trigger {trigger!r}")
+        raise InvariantViolation(
+            f"crash point {point!r} never fired during {trigger!r}")
+    except InjectedCrash:
+        pass
+    finally:
+        crash_plane.disarm()
+    return stepped[0]
+
+
+def run_crash_case(point: str, seed: int, policy: str = "first_fit",
+                   workdir: Optional[str] = None) -> dict:
+    """One crash-matrix cell. Raises ``InvariantViolation`` (tagged with
+    point/seed/policy) on any recovery failure; returns a result row."""
+    spec = CRASH_POINTS[point]
+    trigger = spec.triggers[seed % len(spec.triggers)]
+    wd = workdir or tempfile.mkdtemp(prefix="svff_chaos_")
+    clock = VirtualClock()
+    try:
+        pool = DevicePool(devices=tuple(f"chaosdev{i}" for i in range(8)),
+                          max_vfs=4)
+        mgr = SVFFManager(pool, workdir=wd,
+                          staging=StagingEngine(num_queues=2),
+                          scheduler=policy)
+        tenants: dict[str, SimTenant] = {}
+
+        def make(tid: str, s: int) -> SimTenant:
+            tenants[tid] = SimTenant(tid, seed=s, clock=clock,
+                                     placement=policy)
+            return tenants[tid]
+
+        bystander, other = make("vm0", seed * 13 + 1), make("vm1",
+                                                            seed * 13 + 2)
+        mgr.init(num_vfs=3, tenants=[bystander, other], devices_per_vf=2)
+        bystander.run_steps(1 + seed % 3)
+        other.run_steps(1 + (seed // 3) % 3)
+
+        if trigger == "unpause":
+            mgr.pause(other)
+            victim = other
+        elif trigger == "attach":
+            victim = make("vm2", seed * 13 + 3)
+        else:
+            victim = other
+        check_invariants(mgr)
+        pre_status = victim.status
+        pre_steps = {tid: tn.steps_done for tid, tn in tenants.items()}
+
+        stepped = _fire(mgr, trigger, point, victim)
+
+        # the manager process is gone; rebuild from the survivors
+        mgr = recover_manager(mgr, tenants, policy=policy, workdir=wd)
+        check_invariants(mgr)                       # I1-I8 (incl. I4 bits)
+
+        # the cataloged outcome: rolled back == never issued,
+        # rolled forward == fully applied
+        want = (pre_status if spec.outcome == "none"
+                else _COMPLETED_STATUS[trigger])
+        if trigger == "qmp":
+            want = pre_status
+        if victim.status != want:
+            raise InvariantViolation(
+                f"outcome: {trigger} + {point} left {victim.tid} "
+                f"{victim.status!r}, catalogue says {want!r}")
+        for tid, steps in pre_steps.items():
+            add = stepped if tid == victim.tid else 0
+            if tenants[tid].steps_done != steps + add:
+                raise InvariantViolation(
+                    f"step counter drift for {tid} across crash+recover: "
+                    f"{tenants[tid].steps_done} != {steps + add}")
+
+        # post-recovery liveness: survivors still reconfigure and step
+        # with bit-identical state
+        if victim.status == "paused":
+            mgr.unpause(victim)
+        elif victim.status == "detached":
+            mgr.attach(victim)
+        if victim.status == "running":
+            victim.run_steps(1)
+        mgr.pause(bystander)
+        mgr.unpause(bystander)
+        bystander.run_steps(1)
+        check_invariants(mgr)
+        return {"point": point, "trigger": trigger, "seed": seed,
+                "policy": policy, "outcome": spec.outcome, "ok": True}
+    except InvariantViolation as e:
+        raise InvariantViolation(
+            f"crash case point={point} seed={seed} policy={policy} "
+            f"trigger={trigger}: {e}") from e
+    finally:
+        crash_plane.disarm()
+        if workdir is None:
+            shutil.rmtree(wd, ignore_errors=True)
+
+
+def crash_matrix(points: Optional[Iterable[str]] = None,
+                 seeds: Sequence[int] = tuple(range(20)),
+                 policies: Sequence[str] = ("first_fit", "best_fit",
+                                            "fair_share"),
+                 raise_on_fail: bool = True) -> dict:
+    """The full crash matrix: points x seeds x policies. Returns the
+    result table the CI chaos job uploads (see EXPERIMENTS.md §Chaos)."""
+    points = list(points) if points is not None else list(CRASH_POINTS)
+    cases, failures = [], []
+    for point in points:
+        for policy in policies:
+            for seed in seeds:
+                try:
+                    cases.append(run_crash_case(point, seed, policy))
+                except Exception as e:
+                    # not only InvariantViolation: a red cell that dies
+                    # with e.g. a recovery RuntimeError must still land
+                    # in failures[] so the matrix artifact reports it
+                    # instead of aborting the whole sweep
+                    if raise_on_fail:
+                        raise
+                    failures.append({"point": point, "seed": seed,
+                                     "policy": policy, "error": repr(e)})
+    return {"cases": cases, "failures": failures,
+            "summary": {"points": len(points),
+                        "seeds": len(list(seeds)),
+                        "policies": list(policies),
+                        "num_cases": len(cases) + len(failures),
+                        "num_failures": len(failures)}}

@@ -24,22 +24,26 @@ import zlib
 from typing import Optional
 
 from repro.core.fault import Supervisor
-from repro.core.manager import SVFFManager
+from repro.core.manager import ManagerError, SVFFManager
 from repro.core.pool import DevicePool, PoolError
 from repro.core.pause import PauseError
 from repro.core.records import RecordError
 from repro.core.staging import StagingEngine
 from repro.core.tenant import DevicePausedError
 from repro.core.vf import VFTransitionError
+from repro.sim.chaos import _fire, recover_manager
 from repro.sim.clock import VirtualClock
 from repro.sim.invariants import (InvariantViolation, check_invariants,
                                   check_pause_timings, check_timings)
 from repro.sim.scenario import Op, ScenarioConfig, generate_scenario
 from repro.sim.tenant import SimTenant
 
-#: exception types an op may legally be rejected with (atomically)
+#: exception types an op may legally be rejected with (atomically).
+#: All TYPED: a blanket KeyError here once masked real bugs (e.g. a
+#: missing-snapshot lookup) as "expected rejections" — the manager now
+#: raises ManagerError/UnknownTenantError for those paths instead.
 REJECTIONS = (PoolError, PauseError, VFTransitionError, DevicePausedError,
-              RecordError, KeyError)
+              RecordError, ManagerError)
 
 
 @dataclasses.dataclass
@@ -71,7 +75,10 @@ class ScenarioResult:
         """Digest of the full outcome — equal across replays of a seed."""
         parts = []
         for r in self.ops:
-            parts.append(f"{r.op.kind}:{r.op.tenant}:{r.status}")
+            tag = f"{r.op.kind}:{r.op.tenant}:{r.status}"
+            if r.op.point:
+                tag += f":{r.op.point}"
+            parts.append(tag)
         for tid in sorted(self.final["tenants"]):
             q = self.final["tenants"][tid]
             parts.append(f"{tid}={q['status']}@{q['steps_done']}")
@@ -107,7 +114,7 @@ class ScenarioRunner:
             self.mgr = SVFFManager(pool, workdir=self._wd,
                                    staging=StagingEngine(num_queues=2),
                                    scheduler=self.cfg.policy)
-            self.sup = Supervisor(self.mgr)
+            self.sup = Supervisor(self.mgr, clock=self.clock.now)
             tns = [self._tenant(f"vm{i}") for i in range(op.num_tenants)]
             self.mgr.init(op.num_vfs, tns,
                           devices_per_vf=op.devices_per_vf)
@@ -167,6 +174,19 @@ class ScenarioRunner:
         elif op.kind == "step":
             self._tenant(op.tenant).run_steps(op.steps)
             self.expected_steps[op.tenant] += op.steps
+        elif op.kind == "crash":
+            # kill the manager at the named crash point mid-trigger-op,
+            # then rebuild it via SVFFManager.recover (with the I9
+            # double-recovery check inside recover_manager)
+            victim = self._tenant(op.tenant) if op.tenant else None
+            stepped = _fire(mgr, op.trigger, op.point, victim)
+            if op.tenant:
+                self.expected_steps[op.tenant] += stepped
+            self.mgr = recover_manager(mgr, self.tenants,
+                                       policy=self.cfg.policy,
+                                       workdir=self._wd, num_queues=2)
+            self.sup = Supervisor(self.mgr, clock=self.clock.now)
+            clock.advance(0.1)              # manager restart + recovery
         else:
             raise ValueError(f"unknown op {op.kind}")
         return None

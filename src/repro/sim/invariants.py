@@ -21,6 +21,16 @@
       ``stop_s`` <= ``total``, only ``precopy_*`` phases may be
       background, and a live pause must have run background pre-copy —
       i.e. the reported stall is never under- or over-stated
+  I8  journal/pool/records mutual consistency: at every quiescent point
+      the WAL has no pending entries and no torn ``*.part`` files exist
+      (records or journal dir), and replaying the committed entries in
+      order predicts exactly each journaled tenant's live status — i.e.
+      no committed intent contradicts the world, and no effect exists
+      without a committed intent
+  I9  recovery idempotence (checked by the chaos harness, not here):
+      ``SVFFManager.recover`` applied twice equals once, bit-identically
+      (``repro.sim.chaos.recover_manager``), and recovered tenants still
+      satisfy I4
 
 Violations raise ``InvariantViolation`` tagged by the caller with the
 scenario seed and op index, which is all that is needed to reproduce.
@@ -134,6 +144,41 @@ def check_invariants(mgr) -> None:
     for tid, tn in mgr.tenants.items():
         if tn.status == "detached" and tid not in parked:
             _fail(f"I5 detached {tid} has no disk snapshot to re-attach")
+
+    # -- I8: journal <-> pool <-> records mutual consistency ------------------
+    journal = getattr(mgr, "journal", None)
+    if journal is not None:
+        pending = [e for e in journal.iter_entries()
+                   if e["status"] == "pending"]
+        if pending:
+            _fail(f"I8 journal has pending intents at a quiescent point: "
+                  f"{[(e['seq'], e['op'], e['tenant']) for e in pending]}")
+        parts = mgr.records.part_files()
+        if parts:
+            _fail(f"I8 orphaned record .part files: {parts}")
+        import os
+        jparts = [f for f in os.listdir(journal.dir) if f.endswith(".part")]
+        if jparts:
+            _fail(f"I8 orphaned journal .part files: {jparts}")
+        # replay: the committed history must predict every journaled
+        # tenant's live status (status transitions happen ONLY via
+        # journaled ops, so history and world may never disagree)
+        from repro.core.journal import COMPLETED_STATUS
+        expect: dict = {}
+        for e in journal.iter_entries():           # read-only, no copies
+            if e["status"] != "committed":
+                continue
+            if e["op"] not in COMPLETED_STATUS:
+                _fail(f"I8 committed entry {e['seq']} has unknown op "
+                      f"{e['op']!r}")
+            expect[e["tenant"]] = COMPLETED_STATUS[e["op"]]
+        for tid, want in expect.items():
+            tn = mgr.tenants.get(tid)
+            if tn is None:
+                _fail(f"I8 journal committed ops for unknown tenant {tid}")
+            if tn.status != want:
+                _fail(f"I8 {tid}: journal history says {want!r}, live "
+                      f"status is {tn.status!r}")
 
 
 def check_timings(timings: dict) -> None:

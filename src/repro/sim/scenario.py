@@ -23,12 +23,20 @@ Op kinds (the paper's management surface + fault injection):
   fault    inject a device failure, then run a Supervisor round that must
            recover the tenant via migration (core/fault.py)
   step     the tenant's own workload advances N steps
+  crash    kill the manager at a named crash point while it runs a
+           trigger op (``repro.sim.chaos.CRASH_POINTS``), then rebuild it
+           with ``SVFFManager.recover`` — the harness checks invariants
+           I1-I8 plus recovery idempotence (I9) afterwards
 
 The generator keeps a conservative validity model (who is running/paused/
 detached, how many VFs exist) so sequences are mostly executable, and —
 at ``chaos_rate`` — deliberately emits invalid ops (attach with no free
 VF, detach of a paused VF, double pause, ...) to exercise the manager's
 rejection atomicity: a rejected op must leave every invariant intact.
+``crash_rate`` (default 0, so pre-chaos scenarios are byte-identical)
+additionally emits crash ops; since every crash point has a cataloged
+deterministic recovery outcome (rolled back or rolled forward), the
+model tracks post-recovery state exactly and later ops stay valid.
 """
 from __future__ import annotations
 
@@ -37,7 +45,7 @@ import random
 from typing import Optional
 
 OP_KINDS = ("init", "attach", "detach", "pause", "pause_live", "unpause",
-            "reconf", "migrate", "fault", "step")
+            "reconf", "migrate", "fault", "step", "crash")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +57,8 @@ class Op:
     num_tenants: Optional[int] = None      # init only
     steps: int = 1
     chaos: bool = False                     # expected to be rejected
+    point: Optional[str] = None             # crash only: crash point name
+    trigger: Optional[str] = None           # crash only: op that reaches it
 
     def __post_init__(self):
         assert self.kind in OP_KINDS, self.kind
@@ -64,6 +74,7 @@ class ScenarioConfig:
     policy: str = "first_fit"
     leaf_size: int = 16
     chaos_rate: float = 0.08
+    crash_rate: float = 0.0
 
 
 # weights for the op mix after init (step dominates: tenants mostly work)
@@ -92,6 +103,16 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
         return len(running) + len(paused) + len(detached) + 0
 
     while len(ops) < cfg.num_ops:
+        if cfg.crash_rate and rng.random() < cfg.crash_rate:
+            # crash ops mutate the model per the cataloged recovery
+            # outcome, so the sequence stays valid after the recovery
+            op = _crash_op(rng, cfg, running, paused, detached,
+                           total_vfs, next_id)
+            if op is not None:
+                if op.trigger == "attach" and op.tenant == f"vm{next_id}":
+                    next_id += 1
+                ops.append(op)
+                continue
         if rng.random() < cfg.chaos_rate:
             op = _chaos_op(rng, running, paused, detached, next_id)
             if op is not None:
@@ -155,6 +176,48 @@ def _weighted(rng: random.Random) -> str:
             return kind
         x -= w
     return "step"
+
+
+def _crash_op(rng, cfg, running, paused, detached, total_vfs,
+              next_id) -> Optional[Op]:
+    """A crash-injection op that is guaranteed to reach its crash point,
+    with the model advanced to the cataloged recovery outcome."""
+    from repro.sim.chaos import CRASH_POINTS
+
+    cands = []                       # (point, trigger, tenant | None)
+    free = total_vfs - len(running) - len(paused)
+    can_new = (len(running) + len(paused) + len(detached)
+               < cfg.max_tenants)
+    for point in sorted(CRASH_POINTS):
+        spec = CRASH_POINTS[point]
+        for trig in spec.triggers:
+            if trig in ("pause", "pause_live", "detach") and running:
+                cands.append((point, trig, rng.choice(sorted(running))))
+            elif trig == "unpause" and paused:
+                cands.append((point, trig, rng.choice(sorted(paused))))
+            elif trig == "attach" and free > 0:
+                if detached and (not can_new or rng.random() < 0.5):
+                    cands.append((point, trig,
+                                  rng.choice(sorted(detached))))
+                elif can_new:
+                    cands.append((point, trig, f"vm{next_id}"))
+            elif trig == "qmp":
+                cands.append((point, trig, None))
+    if not cands:
+        return None
+    point, trig, t = cands[rng.randrange(len(cands))]
+    if CRASH_POINTS[point].outcome == "complete":
+        if trig == "attach":
+            if t in detached:
+                detached.remove(t)
+            running.append(t)
+        elif trig in ("pause", "pause_live"):
+            running.remove(t); paused.append(t)
+        elif trig == "detach":
+            running.remove(t); detached.append(t)
+        elif trig == "unpause":
+            paused.remove(t); running.append(t)
+    return Op("crash", tenant=t, point=point, trigger=trig)
 
 
 def _chaos_op(rng, running, paused, detached, next_id) -> Optional[Op]:

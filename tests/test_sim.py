@@ -31,13 +31,21 @@ def test_generator_starts_with_init_and_respects_length():
         assert all(o.kind != "init" for o in ops[1:])
 
 
-def test_replay_fingerprint_stable():
-    """Same seed -> identical per-op outcomes and final tenant states,
-    which is what makes a failing scenario reproducible from its seed."""
-    for seed in (0, 3, 11):
-        a = ScenarioRunner(ScenarioConfig(seed=seed)).run()
-        b = ScenarioRunner(ScenarioConfig(seed=seed)).run()
-        assert a.fingerprint() == b.fingerprint()
+@pytest.mark.parametrize("policy", POLICIES)
+def test_replay_determinism_gate(policy):
+    """CI regression gate for accidental nondeterminism anywhere in the
+    staging/scheduler/pause/journal paths: every seed replays to the same
+    fingerprint (identical per-op outcomes and final tenant states) under
+    every placement policy — thread-pool transfer order, dict iteration,
+    or wall-clock leakage into outcomes would all show here as a flaky
+    mismatch. This is also what makes any failing scenario reproducible
+    from its seed alone."""
+    for seed in (0, 1, 2, 3, 4, 11):
+        cfg = ScenarioConfig(seed=seed, policy=policy)
+        a = ScenarioRunner(cfg).run()
+        b = ScenarioRunner(cfg).run()
+        assert a.fingerprint() == b.fingerprint(), (
+            f"seed={seed} policy={policy} replay diverged")
         assert a.virtual_seconds == b.virtual_seconds
 
 
