@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast chaos chaos-fast bench bench-pause bench-sweep \
-	bench-chaos
+	bench-chaos bench-serve
 
 test:            ## full tier-1 suite
 	$(PYTHON) -m pytest -x -q
@@ -16,7 +16,7 @@ chaos:           ## full crash matrix via pytest (what CI runs on main)
 chaos-fast:      ## PR-gate crash matrix subset
 	$(PYTHON) -m pytest -x -q -m chaos
 
-bench: bench-pause bench-sweep bench-chaos  ## regenerate BENCH_*.json
+bench: bench-pause bench-sweep bench-chaos bench-serve  ## regenerate BENCH_*.json
 
 bench-pause:
 	$(PYTHON) benchmarks/pause_path.py --repeats 3 --out BENCH_pause_path.json
@@ -28,3 +28,7 @@ bench-sweep:
 bench-chaos:     ## the crash-matrix artifact (points x seeds x policies)
 	$(PYTHON) benchmarks/crash_matrix.py --seeds 20 \
 	    --out BENCH_crash_matrix.json
+
+bench-serve:     ## serve-plane hot path (paged vs dense, live-pause p95)
+	$(PYTHON) benchmarks/serve_path.py --repeats 2 \
+	    --out BENCH_serve_path.json

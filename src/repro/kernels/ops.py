@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels import flash_attention as _fa
 from repro.kernels import flash_decode as _fd
+from repro.kernels import paged_decode as _pd
 from repro.kernels import qdma_pack as _qp
 from repro.kernels import ssm_scan as _ss
 
@@ -41,6 +42,17 @@ def flash_decode(q, k, v, pos, *, interpret: bool = False,
                              and not interpret):
         return _ref.flash_decode_ref(q, k, v, pos)
     return _fd.flash_decode(q, k, v, pos,
+                            interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "backend"))
+def paged_decode(q, k_pages, v_pages, tables, pos, *,
+                 interpret: bool = False, backend: str = "auto"):
+    """Block-table-indirected decode over the paged KV pool (serve plane)."""
+    if backend == "ref" or (backend == "auto" and not _on_tpu()
+                             and not interpret):
+        return _ref.paged_decode_ref(q, k_pages, v_pages, tables, pos)
+    return _pd.paged_decode(q, k_pages, v_pages, tables, pos,
                             interpret=interpret or not _on_tpu())
 
 

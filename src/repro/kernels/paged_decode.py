@@ -1,0 +1,106 @@
+"""Paged flash-decode: single-token attention over a block-table-indirected
+KV page pool (the serve plane's paged-KV cache, see ``repro.serve.paged``).
+
+Extends ``flash_decode``'s split-K online-softmax scheme with one level of
+indirection: the cache is a shared pool of fixed-size pages (P, page, K, hd)
+and each sequence names its pages through a prefetched block table
+(B, NP) — the k/v BlockSpec index_map reads ``table[b, pi]`` so the DMA
+engine fetches exactly the pages a sequence owns, in logical order. The
+per-sequence valid length is a second prefetched scalar vector: tiles past
+``pos[b]`` are skipped with ``pl.when``, so decode cost is proportional to
+the tokens a sequence has actually written — not to the pool size and not
+to a dense per-slot ring allocation. ``pos[b] < 0`` (an inactive batch
+slot) skips every tile and yields an exactly-zero output row.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+            acc_scr, *, scale: float, page: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+    npg = pl.num_programs(2)
+    pos = pos_ref[b]
+    start = pi * page
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(start <= pos)
+    def compute():
+        q = q_ref[0, 0, 0, :].astype(jnp.float32) * scale    # (hd,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (page, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (page, hd)
+        s = jax.lax.dot_general(q[None], k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kpos = start + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(kpos <= pos, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == npg - 1)
+    def _finish():
+        o_ref[0, 0, 0, :] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        )[0].astype(o_ref.dtype)
+
+
+def paged_decode(q, k_pages, v_pages, tables, pos, *,
+                 interpret: bool = False):
+    """q: (B,1,H,hd); k_pages,v_pages: (P,page,K,hd); tables: (B,NP) int32;
+    pos: (B,) int32 — attend to logical indices <= pos[b] (< 0: none)."""
+    B, _, H, hd = q.shape
+    page, K = k_pages.shape[1], k_pages.shape[2]
+    NP = tables.shape[1]
+    G = H // K
+    grid = (B, H, NP)
+    kern = functools.partial(_kernel, scale=1.0 / math.sqrt(hd), page=page)
+    tbl = jnp.asarray(tables, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape((B,))
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, hd),
+                             lambda b, h, pi, tbl_ref, pos_ref: (b, 0, h, 0)),
+                pl.BlockSpec((1, page, 1, hd),
+                             lambda b, h, pi, tbl_ref, pos_ref:
+                             (tbl_ref[b, pi], 0, h // G, 0)),
+                pl.BlockSpec((1, page, 1, hd),
+                             lambda b, h, pi, tbl_ref, pos_ref:
+                             (tbl_ref[b, pi], 0, h // G, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, hd),
+                                   lambda b, h, pi, tbl_ref, pos_ref:
+                                   (b, 0, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, pos_arr, q, k_pages, v_pages)

@@ -50,6 +50,34 @@ def flash_decode_ref(q, k, v, pos):
 
 
 # ---------------------------------------------------------------------------
+# paged_decode (flash_decode over a block-table-indirected paged KV pool)
+# ---------------------------------------------------------------------------
+def paged_decode_ref(q, k_pages, v_pages, tables, pos):
+    """q: (B,1,H,hd); k_pages/v_pages: (P,page,K,hd) — the shared page pool;
+    tables: (B,NP) int32 page ids forming each sequence's logical
+    (NP*page)-token view; pos: (B,) int32 — last valid logical index per
+    sequence (attend to <= pos; pos < 0 means no valid tokens and the
+    output row is exactly zero, matching the Pallas kernel's zero-init
+    accumulator when every tile is skipped)."""
+    B, _, H, hd = q.shape
+    page, K = k_pages.shape[1], k_pages.shape[2]
+    T = tables.shape[1] * page
+    G = H // K
+    k = k_pages[tables].reshape(B, T, K, hd)
+    v = v_pages[tables].reshape(B, T, K, hd)
+    qg = q.reshape(B, K, G, hd)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = (jnp.arange(T)[None, :] <= pos[:, None])[:, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.where(valid, jnp.exp(logits - m), 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgt,btkh->bkgh", p / denom, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # ssm_scan (chunked scalar-decay linear recurrence — see models/ssm.py)
 # ---------------------------------------------------------------------------
 def ssm_scan_ref(xdt, Bv, Cv, log_a, chunk: int = 128):

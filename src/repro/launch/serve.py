@@ -28,12 +28,21 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="block-granular paged KV cache")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill (attention stacks; 0 = whole)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args(argv)
 
     run = make_run_config(args.arch, args.shape, smoke=args.smoke)
     model = build_model(run)
     params = model.init(jax.random.key(run.seed))
-    eng = ServeEngine(run, params, slots=args.slots, max_len=args.max_len)
+    eng = ServeEngine(run, params, slots=args.slots, max_len=args.max_len,
+                      paged=args.paged, page_size=args.page_size,
+                      prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -41,12 +50,13 @@ def main(argv=None):
         plen = int(rng.integers(4, 12))
         reqs.append(Request(
             rid=i, prompt=rng.integers(0, run.model.vocab_size, plen),
-            max_new_tokens=args.new_tokens))
+            max_new_tokens=args.new_tokens,
+            temperature=args.temperature, top_k=args.top_k))
         eng.submit(reqs[-1])
 
     t0 = time.perf_counter()
     steps = 0
-    while (eng.step() or eng.queue) and steps < 10_000:
+    while (eng.step() or eng.queue or eng._jobs) and steps < 10_000:
         steps += 1
     wall = time.perf_counter() - t0
     toks = sum(len(r.out) for r in reqs)

@@ -55,7 +55,10 @@ def attention_ref(q, k, v, *, causal: bool, q_offset=0,
 
 def attention(q, k, v, *, causal: bool, backend: str = "reference",
               q_offset=0, kv_len=None, interpret: bool = False) -> jax.Array:
-    if backend == "pallas" and kv_len is None and q_offset == 0:
+    # q_offset may be a traced offset (chunked prefill) — only a static 0
+    # may take the fused kernel, and a tracer must not be bool()'d
+    if (backend == "pallas" and kv_len is None
+            and isinstance(q_offset, int) and q_offset == 0):
         from repro.kernels import ops as kops
         return kops.flash_attention(q, k, v, causal=causal,
                                     interpret=interpret)
@@ -66,9 +69,26 @@ def attention(q, k, v, *, causal: bool, backend: str = "reference",
 def decode_attention(q, k_cache, v_cache, pos, *, backend: str = "reference",
                      interpret: bool = False) -> jax.Array:
     """Single-token decode. q: (B,1,H,hd); caches: (B,S,K,hd); pos: scalar —
-    the index the current token was just written to (attend to <= pos)."""
+    the index the current token was just written to (attend to <= pos).
+    Per-slot pos (B,) is the continuous-batching shape; pos[b] < 0 marks an
+    inactive slot (kv_len 0 — its output is meaningless and discarded)."""
     if backend == "pallas" and jnp.asarray(pos).ndim == 0:
         from repro.kernels import ops as kops
         return kops.flash_decode(q, k_cache, v_cache, pos,
                                  interpret=interpret)
     return attention_ref(q, k_cache, v_cache, causal=False, kv_len=pos + 1)
+
+
+def paged_decode_attention(q, k_pages, v_pages, tables, pos, *,
+                           backend: str = "reference",
+                           interpret: bool = False) -> jax.Array:
+    """Single-token decode over the paged KV pool. q: (B,1,H,hd);
+    k_pages/v_pages: (P,page,K,hd); tables: (B,NP) int32 page ids; pos:
+    (B,) int32 last valid logical index (attend <= pos; < 0 = inactive
+    slot, output row exactly zero)."""
+    from repro.kernels import ops as kops
+    if backend == "pallas":
+        return kops.paged_decode(q, k_pages, v_pages, tables, pos,
+                                 interpret=interpret)
+    return kops.paged_decode(q, k_pages, v_pages, tables, pos,
+                             backend="ref")

@@ -16,7 +16,8 @@ import numpy as np
 from repro.configs.base import (ATTN, MAMBA, MLSTM, SLSTM, ModelConfig,
                                 RunConfig, ShapeConfig)
 from repro.models import params as P
-from repro.models.attention import attention, decode_attention
+from repro.models.attention import (attention, decode_attention,
+                                    paged_decode_attention)
 from repro.models.layers import apply_rope, embed_lookup, rms_norm, swiglu
 from repro.models.moe import moe_ffn
 from repro.models.ssm import mamba_block
@@ -34,7 +35,8 @@ def _dt(name: str):
 # attention mixer
 # ===========================================================================
 def _attn_mixer(cfg: ModelConfig, p: dict, x, cdt, mode, cache, positions,
-                pos, backend, interpret, causal=True):
+                pos, backend, interpret, causal=True, tables=None,
+                active=None):
     B, S, D = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     h = rms_norm(x, p["ln1"], cfg.norm_eps).astype(cdt)
@@ -54,7 +56,26 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, cdt, mode, cache, positions,
         v = constrain(v, "attn_kv")
 
     new_cache = None
-    if mode == "decode":
+    if mode == "decode" and tables is not None:
+        # paged KV: the cache leaf is the shared page pool (P, page, K, hd);
+        # slot b's new token lands in page tables[b, pos//page] at offset
+        # pos%page. Inactive slots (active[b] False) are redirected to the
+        # reserved garbage page 0, so an idle slot's pages stay untouched
+        # and its attention (pos[b] = -1 -> zero valid tokens) reads none.
+        posa = jnp.asarray(pos)
+        page = cache["k"].shape[1]
+        posw = jnp.maximum(posa, 0)
+        rows = jnp.arange(B)
+        pids = tables[rows, posw // page]
+        offs = posw % page
+        if active is not None:
+            pids = jnp.where(active, pids, 0)
+        kc = cache["k"].at[pids, offs].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[pids, offs].set(v[:, 0].astype(cache["v"].dtype))
+        o = paged_decode_attention(q, kc, vc, tables, posa, backend=backend,
+                                   interpret=interpret)
+        new_cache = {"k": kc, "v": vc}
+    elif mode == "decode":
         posa = jnp.asarray(pos)
         if posa.ndim == 0:       # uniform position: dynamic_update_slice
             kc = jax.lax.dynamic_update_slice(
@@ -63,12 +84,34 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, cdt, mode, cache, positions,
                 cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
         else:                    # per-slot positions (continuous batching)
             rows = jnp.arange(B)
-            kc = cache["k"].at[rows, posa].set(k[:, 0].astype(cache["k"].dtype))
-            vc = cache["v"].at[rows, posa].set(v[:, 0].astype(cache["v"].dtype))
+            posw = jnp.maximum(posa, 0)
+            knew = k[:, 0].astype(cache["k"].dtype)
+            vnew = v[:, 0].astype(cache["v"].dtype)
+            if active is not None:
+                # masked scatter: an inactive slot writes back the bytes it
+                # already holds, so its cache rows are bit-untouched (and
+                # nothing lands at position 0 for an empty slot)
+                knew = jnp.where(active[:, None, None],
+                                 knew, cache["k"][rows, posw])
+                vnew = jnp.where(active[:, None, None],
+                                 vnew, cache["v"][rows, posw])
+            kc = cache["k"].at[rows, posw].set(knew)
+            vc = cache["v"].at[rows, posw].set(vnew)
         kc = constrain(kc, "kv_cache")
         vc = constrain(vc, "kv_cache")
         o = decode_attention(q, kc, vc, pos, backend=backend,
                              interpret=interpret)
+        new_cache = {"k": kc, "v": vc}
+    elif mode == "prefill_chunk":
+        # chunked-prefill continuation: append this chunk's KV at offset
+        # ``pos`` and attend causally against everything cached so far
+        # (kv_len masks the not-yet-written tail, incl. any chunk padding)
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        o = attention(q, kc, vc, causal=True, q_offset=pos,
+                      backend=backend, interpret=interpret)
         new_cache = {"k": kc, "v": vc}
     else:
         o = attention(q, k, v, causal=causal, backend=backend,
@@ -128,14 +171,16 @@ def _apply_ffn(cfg: ModelConfig, p: dict, x, cdt):
 
 
 def _apply_block(cfg, run: RunConfig, kind: str, p, x, mode, cache_j,
-                 positions, pos, memory, causal=True, cross=False):
+                 positions, pos, memory, causal=True, cross=False,
+                 tables=None, active=None):
     cdt = _dt(run.precision.compute)
     backend = run.kernel_backend
     interpret = backend == "pallas" and jax.default_backend() != "tpu"
     new_cache = {}
     if kind == ATTN:
         out, nc = _attn_mixer(cfg, p, x, cdt, mode, cache_j, positions, pos,
-                              backend, interpret, causal=causal)
+                              backend, interpret, causal=causal,
+                              tables=tables, active=active)
         x = x + out
         if nc:
             new_cache.update(nc)
@@ -148,6 +193,14 @@ def _apply_block(cfg, run: RunConfig, kind: str, p, x, mode, cache_j,
     else:
         out, nc = _BLOCK_FNS[kind](cfg, p, x, cdt, mode=mode, cache=cache_j,
                                    backend=backend, interpret=interpret)
+        if nc and active is not None and mode == "decode":
+            # recurrent per-slot state: an inactive slot's cells must stay
+            # bit-untouched (its row would otherwise integrate garbage)
+            nc = jax.tree.map(
+                lambda n, o: jnp.where(
+                    active.reshape(active.shape + (1,) * (n.ndim - 1)),
+                    n, o),
+                nc, {k_: cache_j[k_] for k_ in nc})
         x = x + out
         if nc:
             new_cache.update(nc)
@@ -164,18 +217,21 @@ ZERO_AUX = {"load_balance": 0.0, "router_z": 0.0}
 
 def run_stack(cfg: ModelConfig, run: RunConfig, layers: dict, x, mode,
               cache=None, positions=None, pos=None, memory=None,
-              is_encoder=False):
+              is_encoder=False, tables=None, active=None):
     """Scan the (period-stacked) layer stack.
 
     layers: {"block{j}": tree stacked over periods}
     cache: same structure (or None); returned updated for prefill/decode.
+    tables/active: paged-KV block tables + active-slot mask (decode only;
+    see ``Model.decode_step``) — layer-invariant, so threaded by closure.
     """
     pattern = (ATTN,) if is_encoder else cfg.block_pattern
     plen = len(pattern)
     nper = (cfg.num_encoder_layers if is_encoder else cfg.num_layers) // plen
     causal = not is_encoder
     cross = cfg.is_encoder_decoder and not is_encoder
-    with_cache = mode in ("prefill", "decode") and not is_encoder
+    with_cache = (mode in ("prefill", "prefill_chunk", "decode")
+                  and not is_encoder)
 
     def period_fn(x, aux_in, period_params, period_cache):
         aux_acc = dict(aux_in)
@@ -184,7 +240,8 @@ def run_stack(cfg: ModelConfig, run: RunConfig, layers: dict, x, mode,
             cj = period_cache.get(f"block{j}") if period_cache else None
             x, nc, aux = _apply_block(
                 cfg, run, pattern[j], period_params[f"block{j}"], x, mode,
-                cj, positions, pos, memory, causal=causal, cross=cross)
+                cj, positions, pos, memory, causal=causal, cross=cross,
+                tables=tables, active=active)
             if nc is not None:
                 new_caches[f"block{j}"] = nc
             for k_, v_ in aux.items():
@@ -315,23 +372,60 @@ class Model:
         logits, _, cache = self.forward(params, batch, mode="prefill")
         return cache, logits[:, -1]
 
-    def decode_step(self, params, cache, tokens, pos):
+    def decode_step(self, params, cache, tokens, pos, *, tables=None,
+                    active=None):
         """tokens: (B,1) int32; pos: scalar int32 (uniform) or (B,) int32
         (per-slot, continuous batching) — the slot the new token occupies
-        (attends to <= pos). Returns (logits (B,V), new_cache)."""
+        (attends to <= pos). Returns (logits (B,V), new_cache).
+
+        active: optional (B,) bool — False rows are masked OUT of the
+        decode: their cache bytes (KV rows / recurrent state) stay
+        bit-untouched and their attention reads zero tokens (pos[b] must
+        be < 0 for them). Their logits are garbage and must be discarded.
+
+        tables: optional (B,NP) int32 paged-KV block tables. When given,
+        attention-cache leaves are page pools (nper, P, page, K, hd) —
+        see ``repro.serve.paged`` — and ``pos`` is per-slot logical
+        position; page 0 is reserved as the garbage page."""
         cfg, run = self.cfg, self.run
         cdt = _dt(run.precision.compute)
         x = self._embed(params, tokens, cdt)
         x = constrain(x, "hidden")
         posa = jnp.asarray(pos)
-        positions = jnp.reshape(pos, (1,)) if posa.ndim == 0 \
-            else posa[:, None]
+        if posa.ndim == 0:
+            positions = jnp.reshape(pos, (1,))
+        else:
+            # rope positions must be in-range even for inactive (-1) slots
+            positions = jnp.maximum(posa, 0)[:, None]
         x, _, cache = run_stack(cfg, run, params["decoder"]["layers"], x,
                                 "decode", cache=cache, positions=positions,
-                                pos=pos)
+                                pos=pos, tables=tables, active=active)
         x = rms_norm(x, params["decoder"]["final_norm"], cfg.norm_eps)
         logits = self._logits(params, x)
         return logits[:, 0], cache
+
+    def prefill_chunk(self, params, cache, tokens, offset):
+        """One chunk of a chunked prefill: process ``tokens`` (B,C) at
+        absolute positions [offset, offset+C), appending KV into the dense
+        staging ``cache`` and attending causally against every earlier
+        chunk. Returns (cache, logits (B,C,V)) — the caller picks the
+        logits row of the last REAL token (trailing chunk padding yields
+        garbage rows that are never used, and the padded KV tail is
+        overwritten by decode before it can ever be attended).
+
+        Only attention-pattern stacks support this (recurrent blocks would
+        need their chunk-boundary state threaded); callers gate on
+        ``cfg.attention_free`` / ``block_pattern``."""
+        cfg, run = self.cfg, self.run
+        cdt = _dt(run.precision.compute)
+        x = self._embed(params, tokens, cdt)
+        x = constrain(x, "hidden")
+        positions = offset + jnp.arange(x.shape[1])
+        x, _, cache = run_stack(cfg, run, params["decoder"]["layers"], x,
+                                "prefill_chunk", cache=cache,
+                                positions=positions, pos=offset)
+        x = rms_norm(x, params["decoder"]["final_norm"], cfg.norm_eps)
+        return cache, self._logits(params, x)
 
     # =========================================================================
     # specs (dry-run: ShapeDtypeStructs, no allocation)

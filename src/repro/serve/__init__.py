@@ -1,1 +1,10 @@
-"""Serving substrate: continuous-batching engine."""
+"""Serving substrate: continuous-batching engine (dense or paged KV),
+block allocator, and the multi-tenant fleet under the SVFF manager."""
+from repro.serve.engine import DrainResult, Request, ServeEngine
+from repro.serve.fleet import EngineTenant, ServeFleet
+from repro.serve.paged import (BlockAllocator, CacheExhausted,
+                               RequestRejected)
+
+__all__ = ["BlockAllocator", "CacheExhausted", "DrainResult",
+           "EngineTenant", "Request", "RequestRejected", "ServeEngine",
+           "ServeFleet"]

@@ -1,17 +1,39 @@
-"""Serving engine: slot-based continuous batching over decode_step.
+"""Serving engine: continuous batching over decode_step, dense or paged KV.
 
-Requests are prefillled individually (B=1), inserted into a free slot of the
-batched decode state, and decoded together; finished slots are recycled
-without stopping the batch (vLLM-style, minus paged KV — the cache is a
-dense per-slot ring). The engine runs as a Tenant workload under the SVFF
-manager, so it can be paused/unpaused mid-serving (requests queue while
-paused — the guest keeps its 'device').
+Requests are admitted into slots of a batched decode state and decoded
+together; finished slots are recycled without stopping the batch. Two
+cache layouts:
+
+  dense (default)   per-slot ring of ``max_len`` KV rows — simple, but
+                    every slot pays for its worst case and decode walks the
+                    whole allocation
+  paged             block-granular paged KV (``repro.serve.paged``): slots
+                    borrow fixed-size pages from a shared pool via a
+                    ``BlockAllocator``, decode is block-table-indirected
+                    (``kernels/paged_decode``) and costs only the pages a
+                    request has actually written — the vLLM-shaped layout
+                    that lets 16+ concurrent requests share the storage a
+                    dense ring would burn on 4
+
+Prefill is chunked when ``prefill_chunk > 0`` (attention-pattern stacks):
+one prompt chunk is processed per engine step, interleaved with the
+running batch's decode, so admitting a long prompt no longer stalls
+in-flight requests. Sampling is per-request temperature / top-k with a
+counter-seeded RNG — a request's tokens are a pure function of
+(request, logits), so a pause/migrate mid-request cannot change its
+output (invariant I10).
+
+The engine runs as a Tenant workload under the SVFF manager (see
+``repro.serve.fleet``), so it can be paused/unpaused mid-serving —
+requests queue while paused; the guest keeps its 'device'.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, Optional
+import math
+import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +41,10 @@ import numpy as np
 
 from repro.configs.base import RunConfig
 from repro.models.model import Model, build_model
+from repro.serve.paged import (BlockAllocator, CacheExhausted,
+                               RequestRejected, admit_kv, apply_page_moves,
+                               init_paged_cache, paged_cache_supported,
+                               reset_slot_state)
 
 
 @dataclasses.dataclass
@@ -27,13 +53,46 @@ class Request:
     prompt: np.ndarray                 # (len,) int32
     max_new_tokens: int = 16
     eos_id: int = -1                   # -1: never stops early
+    temperature: float = 0.0           # 0: greedy argmax
+    top_k: int = 0                     # 0: no top-k filter
+    seed: int = 0                      # sampling stream (with rid)
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None        # set when admission rejected it
+    t_submit: float = 0.0              # set by ServeEngine.submit
+    t_tok: list = dataclasses.field(default_factory=list)  # per-token wall
+
+
+class DrainResult(list):
+    """``run_until_idle``'s return value: the finished requests, plus
+    ``drained`` — False when the engine stopped with work still pending
+    (paused with a non-empty queue / live slots, or max_steps ran out)."""
+
+    def __init__(self, items=(), drained: bool = True):
+        super().__init__(items)
+        self.drained = drained
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """An in-progress chunked prefill occupying a slot (not yet decoding)."""
+    req: Request
+    slot: int
+    cache: dict                        # dense (B=1) staging cache
+    plen: int
+    offset: int = 0
+    pages: Optional[list] = None       # paged: pages reserved at admission
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
 
 
 class ServeEngine:
     def __init__(self, run: RunConfig, params, *, slots: int = 4,
-                 max_len: int = 256, rules=None):
+                 max_len: int = 256, rules=None, paged: bool = False,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: int = 0):
         self.run = run
         self.model = build_model(run)
         self.params = params
@@ -45,16 +104,41 @@ class ServeEngine:
         self.last_token = np.zeros((slots,), np.int32)
         self.paused = False
         self._finished: list[Request] = []              # completed requests
+        self._jobs: dict[int, _PrefillJob] = {}         # slot -> prefill job
         # per-step dirty set: which export_state keys changed since the
         # last export. Informational for drivers (and asserted in tests);
         # the byte-level skipping itself happens in StagingEngine's
         # identity/digest memo — params stay the same jax objects across
         # exports, so a live pause's stop-and-copy moves them 0 times.
         self._dirty = {"params", "cache", "pos", "last_token"}
-        from repro.train.step import make_serve_steps
-        prefill, decode = make_serve_steps(run, rules)
+
+        cfg = run.model
+        self.paged = paged
+        if paged:
+            ok, why = paged_cache_supported(cfg)
+            if not ok:
+                raise ValueError(f"paged KV for {cfg.name}: {why}")
+            self.page_size = page_size
+            maxp = math.ceil(max_len / page_size)
+            self.num_pages = (num_pages if num_pages is not None
+                              else 1 + slots * maxp)
+            self.alloc = BlockAllocator(self.num_pages, page_size)
+            self.tables = np.zeros((slots, maxp), np.int32)
+            self._dirty.add("tables")
+        # chunked prefill needs per-chunk attention continuation, which only
+        # the attention-pattern stacks support (recurrent blocks would need
+        # their chunk-boundary state threaded through)
+        chunkable = (all(b == "attn" for b in cfg.block_pattern)
+                     and not cfg.is_encoder_decoder
+                     and cfg.frontend.kind == "none")
+        self.prefill_chunk = prefill_chunk if chunkable else 0
+
+        from repro.train.step import (make_decode_step, make_prefill_chunk,
+                                      make_serve_steps)
+        prefill, _ = make_serve_steps(run, rules)
         self._prefill = jax.jit(prefill)
-        self._decode = jax.jit(decode)
+        self._decode = jax.jit(make_decode_step(run, rules, paged=paged))
+        self._chunk = jax.jit(make_prefill_chunk(run, rules))
         self._cache = None                              # lazy batched cache
 
     # -- cache plumbing -------------------------------------------------------
@@ -62,14 +146,18 @@ class ServeEngine:
         if self._cache is None:
             shape = dataclasses.replace(self.run.shape, seq_len=self.max_len,
                                         global_batch=self.slots)
-            self._cache = self.model.init_cache(shape)
+            if self.paged:
+                self._cache = init_paged_cache(self.model, shape,
+                                               self.num_pages,
+                                               self.page_size)
+            else:
+                self._cache = self.model.init_cache(shape)
 
-    def _insert(self, slot: int, req_cache, prompt_len: int):
+    def _insert(self, slot: int, req_cache):
         """Write a (1, prefill_len, ...) request cache into batch slot."""
         def one(path, batch_leaf, req_leaf):
             name = path[-1].key if hasattr(path[-1], "key") else ""
             if name in ("k", "v", "xk", "xv"):
-                L = req_leaf.shape[2]
                 return jax.lax.dynamic_update_slice(
                     batch_leaf, req_leaf.astype(batch_leaf.dtype),
                     (0, slot, 0, 0, 0))
@@ -81,6 +169,8 @@ class ServeEngine:
 
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request):
+        if not req.t_submit:
+            req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def pause(self):
@@ -89,89 +179,289 @@ class ServeEngine:
     def unpause(self):
         self.paused = False
 
+    # -- admission ------------------------------------------------------------
+    def _validate(self, req: Request):
+        cfg = self.run.model
+        npatch = (cfg.frontend.num_patches
+                  if cfg.frontend.kind == "vision" else 0)
+        need = npatch + len(req.prompt) + req.max_new_tokens
+        if len(req.prompt) < 1:
+            raise RequestRejected(f"request {req.rid}: empty prompt")
+        if need > self.max_len:
+            raise RequestRejected(
+                f"request {req.rid}: prompt {len(req.prompt)} + "
+                f"max_new {req.max_new_tokens} exceeds max_len "
+                f"{self.max_len}")
+        return npatch, need
+
+    def _reject(self, req: Request, err: Exception):
+        req.done = True
+        req.error = str(err)
+        self._finished.append(req)
+
     def _admit(self):
+        """Fill free slots from the queue. A request that is rejected or
+        finishes at prefill does NOT consume the slot — it is re-offered
+        to the next queued request in the same pass."""
         for s in range(self.slots):
-            if self.active[s] is None and self.queue:
+            if self.active[s] is not None or s in self._jobs:
+                continue
+            while self.queue:
                 req = self.queue.popleft()
-                plen = len(req.prompt)
-                assert plen + req.max_new_tokens <= self.max_len
+                try:
+                    npatch, need = self._validate(req)
+                except RequestRejected as e:
+                    self._reject(req, e)
+                    continue                      # slot still free
+                pages = None
+                if self.paged:
+                    try:
+                        pages = self.alloc.allocate(
+                            req.rid, self.alloc.pages_needed(need))
+                    except RequestRejected as e:
+                        self._reject(req, e)
+                        continue
+                    except CacheExhausted:
+                        # transient: back off, keep arrival order
+                        self.queue.appendleft(req)
+                        return
                 self._ensure_cache()
-                batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-                cfg = self.run.model
-                if cfg.frontend.kind == "vision":
-                    batch["patches"] = jnp.zeros(
-                        (1, cfg.frontend.num_patches, cfg.d_model),
-                        jnp.bfloat16)
-                if cfg.is_encoder_decoder:
-                    Te = max(1, plen // cfg.frontend.frame_ratio)
-                    batch["frames"] = jnp.zeros((1, Te, cfg.d_model),
-                                                jnp.bfloat16)
-                req_cache, last_logits = self._prefill(self.params, batch)
-                self._insert(s, req_cache, plen)
-                self._dirty |= {"cache", "pos", "last_token"}
-                tok = int(jnp.argmax(last_logits[0]))
-                req.out.append(tok)
-                npatch = (cfg.frontend.num_patches
-                          if cfg.frontend.kind == "vision" else 0)
-                if tok == req.eos_id or req.max_new_tokens <= 1:
-                    req.done = True        # finished at prefill
-                    self._finished.append(req)
-                    continue
-                self.active[s] = req
-                self.pos[s] = npatch + plen - 1
-                self.last_token[s] = tok
+                if self.prefill_chunk and len(req.prompt) > \
+                        self.prefill_chunk:
+                    self._start_job(s, req, pages)
+                    break                         # slot taken by the job
+                if self._prefill_full(s, req, npatch, pages):
+                    break                         # slot now decoding
+                # finished at prefill: slot re-offered to the next request
+
+    def _prefill_full(self, slot: int, req: Request, npatch: int,
+                      pages) -> bool:
+        """B=1 whole-prompt prefill. Returns True if the slot is occupied
+        (request entered the decode batch), False if it finished at
+        prefill (slot stays free — nothing was written into it)."""
+        plen = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        cfg = self.run.model
+        if cfg.frontend.kind == "vision":
+            batch["patches"] = jnp.zeros(
+                (1, cfg.frontend.num_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            Te = max(1, plen // cfg.frontend.frame_ratio)
+            batch["frames"] = jnp.zeros((1, Te, cfg.d_model), jnp.bfloat16)
+        req_cache, last_logits = self._prefill(self.params, batch)
+        tok = self._emit(req, np.asarray(last_logits[0]))
+        if req.done:
+            if pages is not None:
+                self.alloc.free(req.rid)
+            return False
+        self._place(slot, req, req_cache, npatch + plen, pages)
+        self.last_token[slot] = tok
+        return True
+
+    # -- chunked prefill ------------------------------------------------------
+    def _start_job(self, slot: int, req: Request, pages):
+        C = self.prefill_chunk
+        plen = len(req.prompt)
+        cap = C * _next_pow2(math.ceil(plen / C))   # bucketed staging len
+        shape = dataclasses.replace(self.run.shape, seq_len=cap,
+                                    global_batch=1)
+        self._jobs[slot] = _PrefillJob(
+            req=req, slot=slot, cache=self.model.init_cache(shape),
+            plen=plen, pages=pages)
+
+    def _advance_prefill(self):
+        """Process ONE chunk of the oldest pending prefill job — prefill
+        work is batched into the decode schedule instead of stalling it."""
+        if not self._jobs:
+            return
+        slot, job = next(iter(self._jobs.items()))
+        C = self.prefill_chunk
+        req = job.req
+        real = min(C, job.plen - job.offset)
+        chunk = np.zeros((C,), np.int32)
+        chunk[:real] = np.asarray(req.prompt[job.offset:job.offset + real],
+                                  np.int32)
+        job.cache, logits = self._chunk(self.params, job.cache,
+                                        jnp.asarray(chunk)[None],
+                                        jnp.int32(job.offset))
+        job.offset += real
+        if job.offset < job.plen:
+            return
+        del self._jobs[slot]
+        tok = self._emit(req, np.asarray(logits[0, real - 1]))
+        if req.done:                         # finished at prefill
+            if job.pages is not None:
+                self.alloc.free(req.rid)
+            return
+        req_cache = self._slice_kv(job.cache, job.plen)
+        self._place(slot, req, req_cache, job.plen, job.pages)
+        self.last_token[slot] = tok
+
+    @staticmethod
+    def _slice_kv(cache: dict, L: int) -> dict:
+        def one(path, leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            return leaf[:, :, :L] if name in ("k", "v") else leaf
+        return jax.tree_util.tree_map_with_path(one, cache)
+
+    def _place(self, slot: int, req: Request, req_cache, logical_len: int,
+               pages):
+        """Copy-on-admit: move a prefilled request's cache into the batch
+        (paged: into its allocated pages; dense: into its slot ring)."""
+        if self.paged:
+            self._cache = admit_kv(self._cache, req_cache, pages,
+                                   self.page_size, slot)
+            row = self.tables[slot]
+            row[:] = 0
+            row[:len(pages)] = pages
+            self._dirty.add("tables")
+        else:
+            self._insert(slot, req_cache)
+        self.active[slot] = req
+        self.pos[slot] = logical_len - 1
+        self._dirty |= {"cache", "pos", "last_token"}
+
+    # -- sampling -------------------------------------------------------------
+    def _sample(self, req: Request, logits_row: np.ndarray) -> int:
+        lg = np.asarray(logits_row, np.float64)
+        V = self.run.model.vocab_size
+        if lg.size > V:
+            lg = lg.copy()
+            lg[V:] = -np.inf                 # padded vocab tail
+        if req.temperature <= 0:
+            return int(np.argmax(lg))
+        lg = lg / max(req.temperature, 1e-6)
+        if 0 < req.top_k < V:
+            kth = np.partition(lg, -req.top_k)[-req.top_k]
+            lg = np.where(lg >= kth, lg, -np.inf)
+        # counter-seeded: token t of request (seed, rid) always draws the
+        # same gumbel noise — sampling is pause/migrate-invariant (I10)
+        rng = np.random.default_rng([0x5E12, req.seed, req.rid,
+                                     len(req.out)])
+        return int(np.argmax(lg + rng.gumbel(size=lg.shape)))
+
+    def _emit(self, req: Request, logits_row: np.ndarray) -> int:
+        tok = self._sample(req, logits_row)
+        req.out.append(tok)
+        req.t_tok.append(time.perf_counter())
+        if tok == req.eos_id or len(req.out) >= req.max_new_tokens:
+            req.done = True
+            self._finished.append(req)
+        return tok
+
+    # -- the decode loop ------------------------------------------------------
+    def _table_width(self, pos_new: np.ndarray) -> int:
+        """Narrowest pow2 block-table width covering every active slot —
+        decode cost follows the tokens actually written, and the pow2
+        bucketing keeps the number of compiled variants logarithmic."""
+        need = int(np.max(pos_new, initial=-1)) // self.page_size + 1
+        return min(_next_pow2(max(need, 1)), self.tables.shape[1])
 
     def step(self) -> int:
-        """One engine iteration: admit + one batched decode. Returns number
-        of active slots (0 = idle). No-op while paused."""
+        """One engine iteration: admit + one prefill chunk + one batched
+        decode over the ACTIVE slots (inactive slots are masked out: their
+        cache bytes stay untouched and they add no attention work).
+        Returns number of active slots (0 = idle). No-op while paused."""
         if self.paused:
             return 0
         self._admit()
+        self._advance_prefill()
         act = [s for s in range(self.slots) if self.active[s] is not None]
         if not act:
             return 0
         self._ensure_cache()
-        tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
-        pos = jnp.asarray(np.maximum(self.pos + 1, 0), jnp.int32)
-        logits, self._cache = self._decode(self.params, self._cache,
-                                           tokens, pos)
+        act_mask = np.zeros((self.slots,), bool)
+        act_mask[act] = True
+        pos_new = np.where(act_mask, self.pos + 1, -1).astype(np.int32)
+        tokens = jnp.asarray(np.where(act_mask, self.last_token, 0),
+                             jnp.int32)[:, None]
+        if self.paged:
+            W = self._table_width(pos_new)
+            logits, self._cache = self._decode(
+                self.params, self._cache, tokens, jnp.asarray(pos_new),
+                jnp.asarray(self.tables[:, :W]), jnp.asarray(act_mask))
+        else:
+            logits, self._cache = self._decode(
+                self.params, self._cache, tokens, jnp.asarray(pos_new),
+                jnp.asarray(act_mask))
         self._dirty |= {"cache", "pos", "last_token"}
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        lg = np.asarray(logits)
         for s in act:
             req = self.active[s]
             self.pos[s] += 1
-            tok = int(nxt[s])
-            req.out.append(tok)
+            tok = self._emit(req, lg[s])
             self.last_token[s] = tok
-            if (len(req.out) >= req.max_new_tokens or tok == req.eos_id
-                    or self.pos[s] + 1 >= self.max_len):
+            if not req.done and self.pos[s] + 1 >= self.max_len:
                 req.done = True
                 self._finished.append(req)
+            if req.done:
                 self.active[s] = None
-                self._reset_slot(s)
+                self._reset_slot(s, rid=req.rid)
         return len(act)
 
-    def _reset_slot(self, slot: int):
-        """Zero a finished slot's recurrent state (attn KV is masked by pos
-        so it needs no reset)."""
-        def one(path, leaf):
-            name = path[-1].key if hasattr(path[-1], "key") else ""
-            if name in ("k", "v", "xk", "xv"):
-                return leaf
-            fill = -1e30 if name == "m" else 0.0
-            return leaf.at[:, slot].set(fill)
-        self._cache = jax.tree_util.tree_map_with_path(one, self._cache)
+    def _reset_slot(self, slot: int, rid: Optional[int] = None):
+        """Recycle a finished slot: paged KV pages go back to the
+        allocator; dense attn KV is masked by pos so it needs no reset;
+        recurrent per-slot state is zeroed either way."""
+        if self.paged:
+            if rid is not None:
+                self.alloc.free(rid)
+            self.tables[slot, :] = 0
+            self._dirty.add("tables")
+        # dense attn KV is masked by pos (paged pages return to the
+        # allocator), so only the recurrent per-slot state needs zeroing
+        # — one fill-rule implementation for both layouts
+        self._cache = reset_slot_state(self._cache, slot)
         self.pos[slot] = -1
 
-    def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
+    def defragment(self) -> dict:
+        """Compact the page pool (allocator + physical pages + tables);
+        returns the {old: new} page moves. No-op for dense engines."""
+        if not self.paged:
+            return {}
+        moves = self.alloc.defragment()
+        if moves and self._cache is not None:
+            self._cache = apply_page_moves(self._cache, moves)
+            self._dirty |= {"cache", "tables"}
+        for s, req in enumerate(self.active):
+            if req is not None:
+                pages = self.alloc.pages_of(req.rid)
+                self.tables[s, :] = 0
+                self.tables[s, :len(pages)] = pages
+        for job in self._jobs.values():
+            if job.pages is not None:
+                job.pages = self.alloc.pages_of(job.req.rid)
+        return moves
+
+    def abort_prefill_jobs(self):
+        """Push every in-flight chunked-prefill job back onto the queue
+        (front, original arrival order) and release its pages. A job has
+        emitted NO tokens yet (the first token is sampled at completion)
+        and prefill is deterministic, so restarting it after a pause is
+        token-identical — this is how a suspend keeps export_state a
+        COMPLETE device-state snapshot without staging half-built
+        staging caches."""
+        for slot, job in reversed(list(self._jobs.items())):
+            if job.pages is not None:
+                self.alloc.free(job.req.rid)
+            self.queue.appendleft(job.req)    # dict is admission-ordered
+        self._jobs.clear()
+
+    def run_until_idle(self, max_steps: int = 10_000) -> DrainResult:
         """Drive the engine until queue and slots drain; returns every
         request completed during the run (prefill-finished ones included),
-        in completion order."""
+        in completion order. On a PAUSED engine this returns immediately —
+        a paused engine makes no progress, so spinning would only lie
+        about the drain; check ``.drained`` to see whether work remains."""
         for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
+            if self.paused:
                 break
+            if self.step() == 0 and not self.queue and not self._jobs:
+                break
+        pending = (bool(self.queue) or bool(self._jobs)
+                   or any(r is not None for r in self.active))
         done, self._finished = self._finished, []
-        return done
+        return DrainResult(done, drained=not pending)
 
     # -- state for SVFF pause (config-space save) ------------------------------
     def dirty_keys(self) -> set:
@@ -183,6 +473,8 @@ class ServeEngine:
     def export_state(self) -> dict:
         st = {"params": self.params, "cache": self._cache,
               "pos": self.pos.copy(), "last_token": self.last_token.copy()}
+        if self.paged:
+            st["tables"] = self.tables.copy()
         self._dirty = set()
         return st
 
@@ -190,6 +482,10 @@ class ServeEngine:
         if "params" in st:
             self.params = st["params"]
         self._cache = st["cache"]
-        self.pos = st["pos"]
-        self.last_token = st["last_token"]
+        # restored host arrays may be read-only views (zero-copy staging
+        # transport); the engine mutates these in place, so copy
+        self.pos = np.array(st["pos"], np.int64)
+        self.last_token = np.array(st["last_token"], np.int32)
+        if self.paged and "tables" in st:
+            self.tables = np.array(st["tables"], np.int32)
         self._dirty = set(st)

@@ -1,0 +1,253 @@
+"""ServeFleet — N serving engines as tenants under the SVFF manager.
+
+The paper's transparency claim only matters under load: a pause/migrate is
+interesting when the paused guest is mid-decode with a full batch and
+traffic keeps arriving. The fleet packages exactly that:
+
+  EngineTenant   adapts a ``ServeEngine`` to the manager/pause duck-typed
+                 tenant protocol (bind/suspend/resume/export_state/...), so
+                 the real pool / scheduler / journal / staging / records
+                 paths manage serving guests unchanged
+  ServeFleet     owns a DevicePool + SVFFManager, places each engine tenant
+                 through the configured placement policy
+                 (``core.scheduler.make_scheduler``), spreads arriving
+                 requests across engines with SLO-aware admission (bounded
+                 per-engine load; overloads raise ``RequestRejected``
+                 instead of building unbounded queues), and keeps serving
+                 THROUGH ``pause_live``/``migrate`` — the pre-copy rounds
+                 step the victim engine itself, so reconfiguration fires
+                 mid-traffic, which is the whole point.
+"""
+from __future__ import annotations
+
+import types
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.manager import SVFFManager
+from repro.core.pool import DevicePool
+from repro.core.tenant import DevicePausedError
+from repro.core.vf import VirtualFunction
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged import RequestRejected
+
+
+class EngineTenant:
+    """Tenant-protocol adapter around a ServeEngine (the guest's 'VM')."""
+
+    def __init__(self, tid: str, engine: ServeEngine, *,
+                 placement: str = "first_fit"):
+        self.tid = tid
+        self.engine = engine
+        self.status = "created"        # created|running|paused|detached
+        self.vf_id: Optional[str] = None
+        self.steps_done = 0
+        self.workload = "serve"
+        self._exec_cache: dict = {}
+        self._template = None
+        self.run = types.SimpleNamespace(
+            model=types.SimpleNamespace(name=engine.run.model.name),
+            placement=placement, seed=engine.run.seed)
+
+    # -- lifecycle -----------------------------------------------------------
+    def bind(self, vf: VirtualFunction, state=None, *,
+             flash: bool = True) -> float:
+        if state is not None:
+            self.engine.import_state(state)
+        key = (tuple(vf.mesh_shape), tuple(str(d) for d in vf.devices))
+        self._exec_cache.setdefault(key, True)
+        self.vf_id = vf.vf_id
+        self.status = "running"
+        self.engine.unpause()
+        vf.emulated.update({"tenant": self.tid, "status": "running",
+                            "steps_done": self.steps_done})
+        return 0.0
+
+    def run_steps(self, n: int = 1) -> dict:
+        if self.status == "paused":
+            raise DevicePausedError(
+                f"{self.tid}: device {self.vf_id} is paused")
+        if self.status != "running":
+            raise RuntimeError(f"{self.tid}: no device attached")
+        active = 0
+        for _ in range(n):
+            active = self.engine.step()
+            self.steps_done += 1
+        return {"active": active, "queued": len(self.engine.queue)}
+
+    # -- pause protocol ------------------------------------------------------
+    def export_state(self):
+        st = self.engine.export_state()
+        # cache the restore template only once the engine has a real
+        # cache (a fresh engine exports cache=None, which would freeze a
+        # template missing every cache leaf); shapes are stable after
+        if self._template is None and st.get("cache") is not None:
+            self._template = jax.tree.map(
+                lambda x: np.zeros(getattr(x, "shape", ()),
+                                   dtype=getattr(x, "dtype", np.float32)),
+                st)
+        return st
+
+    def export_specs(self):
+        return {}
+
+    def shardings_for(self, vf: VirtualFunction):
+        return None
+
+    def state_template(self):
+        if self._template is None:
+            self.engine._ensure_cache()
+            self.export_state()
+        if self._template is None:
+            raise RuntimeError(
+                f"{self.tid}: no exported state to derive a restore "
+                "template from")
+        return self._template
+
+    def dirty_keys(self):
+        return self.engine.dirty_keys()
+
+    def suspend(self):
+        self.engine.pause()
+        # in-flight chunked prefills re-queue (they have emitted nothing
+        # and are deterministic), so the exported snapshot really is the
+        # engine's complete device state
+        self.engine.abort_prefill_jobs()
+        self.engine._cache = None      # device refs dropped; snapshot holds
+        self.status = "paused"
+
+    def resume(self, state, vf: VirtualFunction):
+        self.status = "running"
+        self.bind(vf, state=state)
+
+    def detach(self):
+        self.engine.pause()
+        self.engine.abort_prefill_jobs()
+        self.engine._cache = None
+        self.vf_id = None
+        self.status = "detached"
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def load(self) -> int:
+        """Requests this engine is responsible for right now."""
+        eng = self.engine
+        return (len(eng.queue) + len(eng._jobs)
+                + sum(r is not None for r in eng.active))
+
+    def query(self) -> dict:
+        return {"tenant": self.tid, "status": self.status,
+                "vf": self.vf_id, "steps_done": self.steps_done,
+                "workload": self.workload, "load": self.load,
+                "exec_keys": [list(map(str, k)) for k in self._exec_cache]}
+
+    def inject_failure(self):
+        pass
+
+
+class ServeFleet:
+    """Run ``num_engines`` ServeEngines as SVFF tenants over one pool."""
+
+    def __init__(self, run, params, *, num_engines: int = 2,
+                 num_devices: int = 8, policy: str = "first_fit",
+                 slots: int = 4, max_len: int = 256, paged: bool = True,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: int = 0, slo_max_load: int = 64,
+                 workdir: str = "/tmp/svff_fleet", devices=None):
+        self.run = run
+        self.slo_max_load = slo_max_load
+        devices = (tuple(devices) if devices is not None else
+                   tuple(f"fleetdev{i}" for i in range(num_devices)))
+        self.pool = DevicePool(devices=devices, max_vfs=max(num_engines, 1))
+        self.mgr = SVFFManager(self.pool, workdir=workdir, scheduler=policy)
+        self.tenants: dict[str, EngineTenant] = {}
+        # each tenant OWNS its device state: a pause deletes the exported
+        # leaves after staging them, so engines must not alias one params
+        # pytree (guest isolation, like VMs not sharing guest RAM)
+        engines = [
+            ServeEngine(run, jax.tree.map(jax.numpy.array, params),
+                        slots=slots, max_len=max_len,
+                        paged=paged, page_size=page_size,
+                        num_pages=num_pages, prefill_chunk=prefill_chunk)
+            for _ in range(num_engines)]
+        tns = [EngineTenant(f"serve{i}", eng, placement=policy)
+               for i, eng in enumerate(engines)]
+        for tn in tns:
+            self.tenants[tn.tid] = tn
+        self.mgr.init(num_engines, tns)
+        self._rejected: list[Request] = []
+
+    # -- traffic --------------------------------------------------------------
+    def submit(self, req: Request) -> str:
+        """SLO-aware admission: the request goes to the least-loaded
+        attached engine; if even that one is past ``slo_max_load``, the
+        request is rejected NOW (typed) rather than queued into an SLO
+        miss. Paused engines still accept traffic (their queue holds) but
+        running ones are preferred."""
+        cands = [tn for tn in self.tenants.values()
+                 if tn.status in ("running", "paused")]
+        if not cands:
+            raise RequestRejected(f"request {req.rid}: no serving engines")
+        running = [tn for tn in cands if tn.status == "running"]
+        pick = min(running or cands, key=lambda tn: (tn.load, tn.tid))
+        if pick.load >= self.slo_max_load:
+            req.done = True
+            req.error = (f"SLO admission: engine {pick.tid} at load "
+                         f"{pick.load} >= {self.slo_max_load}")
+            self._rejected.append(req)
+            raise RequestRejected(req.error)
+        pick.engine.submit(req)
+        return pick.tid
+
+    def step(self) -> int:
+        """One fleet iteration: every RUNNING engine advances one step.
+        Paused engines hold their queues (the guest keeps its device)."""
+        active = 0
+        for tn in self.tenants.values():
+            if tn.status == "running":
+                active += tn.run_steps(1)["active"]
+        return active
+
+    def drain(self, max_steps: int = 10_000) -> "DrainResult":
+        """Serve until every RUNNING engine is idle; returns the finished
+        (and SLO-rejected) requests. ``.drained`` is False when work is
+        stranded — on a still-paused engine, or because max_steps ran
+        out — mirroring ``ServeEngine.run_until_idle``."""
+        from repro.serve.engine import DrainResult
+        done: list[Request] = []
+        for _ in range(max_steps):
+            if self.step() == 0 and not any(
+                    tn.engine.queue or tn.engine._jobs
+                    for tn in self.tenants.values()
+                    if tn.status == "running"):
+                break
+        pending = False
+        for tn in self.tenants.values():
+            res = tn.engine.run_until_idle(max_steps=0)
+            done.extend(res)
+            pending |= not res.drained
+        done.extend(self._rejected)
+        self._rejected = []
+        return DrainResult(done, drained=not pending)
+
+    # -- reconfiguration under traffic ----------------------------------------
+    def pause_live(self, tid: str, *, rounds: int = 2):
+        """Live pause of one engine while it KEEPS SERVING its batch: the
+        pre-copy rounds step the victim engine (and the rest of the fleet
+        rides along untouched)."""
+        tn = self.tenants[tid]
+        return self.mgr.pause_live(
+            tn, rounds=rounds, step_fn=lambda: tn.run_steps(1))
+
+    def unpause(self, tid: str):
+        return self.mgr.unpause(self.tenants[tid])
+
+    def migrate(self, tid: str):
+        return self.mgr.migrate(self.tenants[tid])
+
+    def query(self) -> dict:
+        return {"manager": self.mgr.query(),
+                "engines": {tid: tn.query()
+                            for tid, tn in self.tenants.items()}}

@@ -1,0 +1,239 @@
+"""Paged KV cache: block-granular allocation for the serve plane.
+
+The dense per-slot ring allocates ``slots x max_len`` KV rows up front and
+decodes against the whole allocation; the paged cache carves the same
+physical storage into fixed-size *pages* handed out on demand — the exact
+shape of the ``DevicePool`` one layer down (a pool of indivisible resource
+units, an owner table, allocate/free/defragment), applied to KV rows
+instead of accelerator devices:
+
+  BlockAllocator     the PF analogue: owns the page pool, tracks per-request
+                     ownership, enforces isolation (a page has at most one
+                     owner), compacts on ``defragment``
+  page 0             reserved garbage page — never allocated; inactive batch
+                     slots' masked writes are redirected there, which is how
+                     an idle slot's pages stay bit-untouched
+  copy-on-admit      a request is prefilled into a private dense staging
+                     cache (B=1) and its KV is *copied* into its allocated
+                     pages on admission (``admit_kv``), so admission never
+                     aliases the running batch's storage
+
+The attention-side consumer is ``kernels/paged_decode`` (block-table
+indirection, cost proportional to pages actually written).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class RequestRejected(RuntimeError):
+    """Typed admission rejection: the request can NEVER be served by this
+    engine (over-long prompt, more pages than the pool holds). The engine
+    marks the request done-with-error and keeps serving the batch — one
+    bad request must not kill the engine (this replaces a bare ``assert``
+    that vanished under ``python -O``)."""
+
+
+class CacheExhausted(RuntimeError):
+    """Transient allocation failure: not enough free pages *right now*.
+    Admission backs off (the request stays queued) rather than failing."""
+
+
+def _is_kv(path) -> bool:
+    """Attention-cache leaves that need no slot reset (self-attn KV is
+    masked by pos; cross xk/xv only ever appear in DENSE caches — the
+    paged layout gates out encoder-decoder stacks entirely)."""
+    name = path[-1].key if hasattr(path[-1], "key") else ""
+    return name in ("k", "v", "xk", "xv")
+
+
+class BlockAllocator:
+    """Fixed-size page pool with per-request ownership.
+
+    Page ids run [0, num_pages); page 0 is reserved (garbage page), so the
+    allocatable capacity is ``num_pages - 1``. Free pages are handed out
+    lowest-id first, which keeps block tables deterministic (the serving
+    analogue of the scheduler's 'ties break in PF table order')."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved)")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self._free = list(range(1, num_pages))     # ascending
+        self._owned: dict[int, list[int]] = {}     # rid -> page ids
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - 1
+
+    def pages_needed(self, tokens: int) -> int:
+        return max(1, math.ceil(tokens / self.page_size))
+
+    # -- allocate / free -----------------------------------------------------
+    def allocate(self, rid: int, n: int) -> list[int]:
+        if rid in self._owned:
+            raise ValueError(f"request {rid} already holds pages")
+        if n > self.capacity:
+            raise RequestRejected(
+                f"request {rid} needs {n} pages; pool capacity is "
+                f"{self.capacity} (page_size={self.page_size})")
+        if n > len(self._free):
+            raise CacheExhausted(
+                f"request {rid} needs {n} pages, only {len(self._free)} "
+                "free")
+        got, self._free = self._free[:n], self._free[n:]
+        self._owned[rid] = got
+        return list(got)
+
+    def extend(self, rid: int, n: int = 1) -> list[int]:
+        if rid not in self._owned:
+            raise ValueError(f"request {rid} holds no pages")
+        if n > len(self._free):
+            raise CacheExhausted(
+                f"request {rid} needs {n} more pages, only "
+                f"{len(self._free)} free")
+        got, self._free = self._free[:n], self._free[n:]
+        self._owned[rid].extend(got)
+        return list(got)
+
+    def free(self, rid: int) -> list[int]:
+        pages = self._owned.pop(rid, [])
+        self._free.extend(pages)
+        self._free.sort()
+        return pages
+
+    def pages_of(self, rid: int) -> list[int]:
+        return list(self._owned.get(rid, []))
+
+    def owners(self) -> dict[int, list[int]]:
+        return {rid: list(p) for rid, p in self._owned.items()}
+
+    def check_invariants(self):
+        """Mirror of DevicePool._check_invariants: disjoint ownership,
+        everything in-pool, free+owned is an exact partition."""
+        seen: dict[int, int] = {}
+        for rid, pages in self._owned.items():
+            for p in pages:
+                assert 1 <= p < self.num_pages, (rid, p)
+                assert p not in seen, (
+                    f"page {p} owned by both {seen[p]} and {rid}")
+                seen[p] = rid
+        assert not (set(self._free) & set(seen))
+        assert len(self._free) + len(seen) == self.capacity
+
+    # -- defragment ----------------------------------------------------------
+    def defragment(self) -> dict[int, int]:
+        """Compact owned pages to the lowest ids (request order, then page
+        order — deterministic). Returns the {old_id: new_id} moves; the
+        caller must apply the same mapping to the physical page arrays and
+        any block tables (``apply_page_moves``)."""
+        moves: dict[int, int] = {}
+        nxt = 1
+        for rid in sorted(self._owned):
+            pages = self._owned[rid]
+            for i, p in enumerate(pages):
+                if p != nxt:
+                    moves[p] = nxt
+                pages[i] = nxt
+                nxt += 1
+        self._free = list(range(nxt, self.num_pages))
+        self.check_invariants()
+        return moves
+
+
+def permutation_of(moves: dict[int, int], num_pages: int) -> np.ndarray:
+    """(num_pages,) gather indices g with new_pages = pages[g]. Moves from
+    ``defragment`` never swap into a still-live source (targets are always
+    compacted below their sources), so a single gather applies them all."""
+    g = np.arange(num_pages)
+    for old, new in moves.items():
+        g[new] = old
+    return g
+
+
+# ---------------------------------------------------------------------------
+# the paged cache tree
+# ---------------------------------------------------------------------------
+def paged_cache_supported(cfg) -> tuple[bool, str]:
+    if cfg.is_encoder_decoder:
+        return False, "encoder-decoder cross-KV is not paged"
+    if "attn" not in cfg.block_pattern:
+        return False, "attention-free stack has no KV to page"
+    return True, ""
+
+
+def init_paged_cache(model, shape, num_pages: int, page_size: int) -> dict:
+    """Build the serve cache tree: attention k/v leaves become shared page
+    pools (nper, P, page, K, hd); every other leaf (recurrent state) stays
+    dense per-slot (B, ...) exactly as ``init_cache`` makes it."""
+    ok, why = paged_cache_supported(model.cfg)
+    if not ok:
+        raise ValueError(f"paged KV unsupported for {model.cfg.name}: {why}")
+    # the dense template only sizes non-KV leaves, so keep its seq dim tiny
+    base = model.init_cache(dataclasses.replace(shape, seq_len=1))
+
+    def one(path, leaf):
+        if _is_kv(path):
+            nper, _, _, K, hd = leaf.shape
+            return jnp.zeros((nper, num_pages, page_size, K, hd),
+                             leaf.dtype)
+        return leaf
+    return jax.tree_util.tree_map_with_path(one, base)
+
+
+def admit_kv(cache: dict, req_cache: dict, page_ids, page_size: int,
+             slot: int) -> dict:
+    """Copy-on-admit: scatter a prefilled request's (nper, 1, L, K, hd)
+    KV into its allocated pages; non-KV leaves (recurrent state) are
+    written into batch ``slot`` densely."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    n = int(ids.shape[0])
+
+    def one(path, pooled, req_leaf):
+        if _is_kv(path):
+            nper, _, L, K, hd = req_leaf.shape
+            pad = n * page_size - L
+            r = jnp.pad(req_leaf[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            r = r.reshape(nper, n, page_size, K, hd)
+            return pooled.at[:, ids].set(r.astype(pooled.dtype))
+        return jax.lax.dynamic_update_slice(
+            pooled, req_leaf.astype(pooled.dtype),
+            (0, slot) + (0,) * (pooled.ndim - 2))
+    return jax.tree_util.tree_map_with_path(one, cache, req_cache)
+
+
+def apply_page_moves(cache: dict, moves: dict[int, int]) -> dict:
+    """Apply a ``defragment`` move map to the physical page pools."""
+    if not moves:
+        return cache
+
+    def one(path, leaf):
+        if _is_kv(path):
+            g = permutation_of(moves, leaf.shape[1])
+            return leaf[:, jnp.asarray(g)]
+        return leaf
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def reset_slot_state(cache: dict, slot: int) -> dict:
+    """Zero a finished slot's dense (non-KV) recurrent state; paged KV
+    needs no reset — its pages are simply returned to the allocator."""
+    def one(path, leaf):
+        if _is_kv(path):
+            return leaf
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        fill = -1e30 if name == "m" else 0.0
+        return leaf.at[:, slot].set(fill)
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -49,12 +49,12 @@ from repro.sim.invariants import (InvariantViolation, check_invariants,
                                   check_pause_timings, check_timings)
 from repro.sim.scenario import (Op, OP_KINDS, ScenarioConfig,
                                 generate_scenario)
-from repro.sim.tenant import ServeSimTenant, SimTenant
+from repro.sim.tenant import ServeSimTenant, SimServeTenant, SimTenant
 
 __all__ = [
     "CRASH_POINTS", "CrashSpec", "InvariantViolation", "Op", "OP_KINDS",
     "OpResult", "ScenarioConfig", "ScenarioResult", "ScenarioRunner",
-    "ServeSimTenant", "SimTenant", "VirtualClock",
+    "ServeSimTenant", "SimServeTenant", "SimTenant", "VirtualClock",
     "check_invariants", "check_pause_timings", "check_timings",
     "crash_matrix", "generate_scenario", "recover_manager",
     "run_crash_case", "run_scenario", "state_fingerprint",

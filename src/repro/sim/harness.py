@@ -36,7 +36,7 @@ from repro.sim.clock import VirtualClock
 from repro.sim.invariants import (InvariantViolation, check_invariants,
                                   check_pause_timings, check_timings)
 from repro.sim.scenario import Op, ScenarioConfig, generate_scenario
-from repro.sim.tenant import SimTenant
+from repro.sim.tenant import SimServeTenant, SimTenant
 
 #: exception types an op may legally be rejected with (atomically).
 #: All TYPED: a blanket KeyError here once masked real bugs (e.g. a
@@ -98,10 +98,16 @@ class ScenarioRunner:
     # ----------------------------------------------------------------- ops
     def _tenant(self, tid: str) -> SimTenant:
         if tid not in self.tenants:
-            self.tenants[tid] = SimTenant(
-                tid, seed=self.cfg.seed * 1009 + len(self.tenants),
-                leaf_size=self.cfg.leaf_size, clock=self.clock,
-                placement=self.cfg.policy)
+            if tid.startswith("sv"):
+                # serving tenants: paged toy engine, I10-checked outputs
+                self.tenants[tid] = SimServeTenant(
+                    tid, seed=self.cfg.seed, clock=self.clock,
+                    placement=self.cfg.policy)
+            else:
+                self.tenants[tid] = SimTenant(
+                    tid, seed=self.cfg.seed * 1009 + len(self.tenants),
+                    leaf_size=self.cfg.leaf_size, clock=self.clock,
+                    placement=self.cfg.policy)
             self.expected_steps[tid] = 0
         return self.tenants[tid]
 
@@ -172,6 +178,12 @@ class ScenarioRunner:
                 raise InvariantViolation(
                     f"fault on {op.tenant} not recovered: {kinds}")
         elif op.kind == "step":
+            self._tenant(op.tenant).run_steps(op.steps)
+            self.expected_steps[op.tenant] += op.steps
+        elif op.kind == "serve_submit":
+            # guest-side queueing — legal even while the engine is paused
+            self._tenant(op.tenant).submit_burst(op.burst)
+        elif op.kind == "serve_step":
             self._tenant(op.tenant).run_steps(op.steps)
             self.expected_steps[op.tenant] += op.steps
         elif op.kind == "crash":

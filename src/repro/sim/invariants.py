@@ -31,6 +31,12 @@
       ``SVFFManager.recover`` applied twice equals once, bit-identically
       (``repro.sim.chaos.recover_manager``), and recovered tenants still
       satisfy I4
+  I10 serve-token determinism: every request a serving tenant has emitted
+      tokens for — finished or in flight — matches the no-reconfiguration
+      oracle (``SimServeTenant.expected_output``) token-for-token. A
+      request's output is identical with and without a pause/pause_live/
+      migrate mid-flight; any byte corrupted in the paged KV state by a
+      reconfiguration round-trip surfaces here as token divergence
 
 Violations raise ``InvariantViolation`` tagged by the caller with the
 scenario seed and op index, which is all that is needed to reproduce.
@@ -179,6 +185,23 @@ def check_invariants(mgr) -> None:
             if tn.status != want:
                 _fail(f"I8 {tid}: journal history says {want!r}, live "
                       f"status is {tn.status!r}")
+
+    # -- I10: serve-token determinism across reconfigurations -----------------
+    for tid, tn in mgr.tenants.items():
+        if not hasattr(tn, "expected_output"):
+            continue
+        for req in getattr(tn, "requests", ()):
+            want = tn.expected_output(tn.seed, req.rid)
+            got = list(req.out)
+            if req.done and got != want:
+                _fail(f"I10 {tid} rid={req.rid}: finished output {got} "
+                      f"!= oracle {want} (token divergence across a "
+                      f"reconfiguration)")
+            if not req.done and got != want[:len(got)]:
+                _fail(f"I10 {tid} rid={req.rid}: in-flight prefix {got} "
+                      f"diverged from oracle {want[:len(got)]}")
+            if req.done and not req.out:
+                _fail(f"I10 {tid} rid={req.rid}: done with no tokens")
 
 
 def check_timings(timings: dict) -> None:

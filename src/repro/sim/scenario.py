@@ -27,6 +27,11 @@ Op kinds (the paper's management surface + fault injection):
            trigger op (``repro.sim.chaos.CRASH_POINTS``), then rebuild it
            with ``SVFFManager.recover`` — the harness checks invariants
            I1-I8 plus recovery idempotence (I9) afterwards
+  serve_submit  a burst of requests arrives at the serving tenant sv0
+           (guest-side queueing: legal even while sv0 is paused)
+  serve_step    sv0's engine advances N iterations (admit + batched
+           decode over its paged KV); invariant I10 then checks every
+           request's tokens against the no-reconfiguration oracle
 
 The generator keeps a conservative validity model (who is running/paused/
 detached, how many VFs exist) so sequences are mostly executable, and —
@@ -45,7 +50,8 @@ import random
 from typing import Optional
 
 OP_KINDS = ("init", "attach", "detach", "pause", "pause_live", "unpause",
-            "reconf", "migrate", "fault", "step", "crash")
+            "reconf", "migrate", "fault", "step", "crash",
+            "serve_submit", "serve_step")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +65,7 @@ class Op:
     chaos: bool = False                     # expected to be rejected
     point: Optional[str] = None             # crash only: crash point name
     trigger: Optional[str] = None           # crash only: op that reaches it
+    burst: int = 0                          # serve_submit only: #requests
 
     def __post_init__(self):
         assert self.kind in OP_KINDS, self.kind
@@ -75,6 +82,12 @@ class ScenarioConfig:
     leaf_size: int = 16
     chaos_rate: float = 0.08
     crash_rate: float = 0.0
+    # serve-traffic ops (0 keeps pre-serve sequences byte-identical): at
+    # this rate the scenario interleaves serve_submit (bursty arrivals) /
+    # serve_step ops on a dedicated serving tenant "sv0" that is attached
+    # right after init and participates in pause/pause_live/unpause/
+    # migrate like any other tenant — invariant I10 checks its tokens
+    serve_rate: float = 0.0
 
 
 # weights for the op mix after init (step dominates: tenants mostly work)
@@ -86,10 +99,20 @@ _WEIGHTS = (("step", 30), ("pause", 6), ("pause_live", 6), ("unpause", 14),
 def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
     rng = random.Random(0x5FF ^ (cfg.seed * 2654435761 % 2**31))
     ops: list[Op] = []
+    serve = cfg.serve_rate > 0 and cfg.max_vfs >= 2
 
     nvf = rng.randint(1, min(4, cfg.max_vfs))
     per = rng.choice([1, 2]) if cfg.num_devices >= 4 * nvf else 1
     m = rng.randint(1, nvf)
+    if serve:
+        # make room for the dedicated serving tenant sv0: one more VF
+        # than train tenants, within BOTH the VF and the device budget
+        nvf = min(max(nvf, m + 1), cfg.max_vfs, cfg.num_devices)
+        m = min(m, nvf - 1) or 1
+        if per * nvf > cfg.num_devices:
+            per = 1
+        if nvf < 2:
+            serve = False            # no room for a second VF: no sv0
     ops.append(Op("init", num_vfs=nvf, devices_per_vf=per, num_tenants=m))
 
     # validity model
@@ -98,11 +121,23 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
     detached: list[str] = []
     next_id = m
     total_vfs = nvf          # conservative lower bound (see sim README)
+    if serve:
+        # sv0 joins the shared validity model: pause/pause_live/unpause/
+        # migrate/step pick it like any tenant; detach/fault never do
+        ops.append(Op("attach", tenant="sv0"))
+        ops.append(Op("serve_submit", tenant="sv0",
+                      burst=rng.choice([1, 2, 3])))
+        running.append("sv0")
 
     def tenant_count():
         return len(running) + len(paused) + len(detached) + 0
 
     while len(ops) < cfg.num_ops:
+        if serve and rng.random() < cfg.serve_rate:
+            op = _serve_op(rng, running, paused)
+            if op is not None:
+                ops.append(op)
+                continue
         if cfg.crash_rate and rng.random() < cfg.crash_rate:
             # crash ops mutate the model per the cataloged recovery
             # outcome, so the sequence stays valid after the recovery
@@ -157,15 +192,37 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
                 continue
             running.append(t)
             ops.append(Op("attach", tenant=t))
-        elif kind == "detach" and running:
-            t = rng.choice(sorted(running))
+        elif kind == "detach" and _nonserve(running):
+            # the serving tenant is never detached: its request plane
+            # (queue/in-flight batch) lives in guest RAM, which detach
+            # (unlike pause) does not preserve
+            t = rng.choice(_nonserve(running))
             running.remove(t); detached.append(t)
             ops.append(Op("detach", tenant=t))
         elif kind == "migrate" and running:
             ops.append(Op("migrate", tenant=rng.choice(sorted(running))))
-        elif kind == "fault" and running:
-            ops.append(Op("fault", tenant=rng.choice(sorted(running))))
+        elif kind == "fault" and _nonserve(running):
+            ops.append(Op("fault", tenant=rng.choice(_nonserve(running))))
     return tuple(ops)
+
+
+def _nonserve(tenants: list) -> list:
+    return sorted(t for t in tenants if not t.startswith("sv"))
+
+
+def _serve_op(rng: random.Random, running, paused) -> Optional[Op]:
+    """Serve-traffic op: bursty arrivals (the queue accepts even while the
+    engine is PAUSED — the guest keeps its device) and engine steps (only
+    legal while running)."""
+    if "sv0" in running:
+        if rng.random() < 0.55:
+            return Op("serve_submit", tenant="sv0",
+                      burst=rng.choice([1, 1, 2, 3, 6]))
+        return Op("serve_step", tenant="sv0", steps=rng.randint(1, 3))
+    if "sv0" in paused:
+        return Op("serve_submit", tenant="sv0",
+                  burst=rng.choice([1, 2]))
+    return None
 
 
 def _weighted(rng: random.Random) -> str:
@@ -191,8 +248,10 @@ def _crash_op(rng, cfg, running, paused, detached, total_vfs,
     for point in sorted(CRASH_POINTS):
         spec = CRASH_POINTS[point]
         for trig in spec.triggers:
-            if trig in ("pause", "pause_live", "detach") and running:
+            if trig in ("pause", "pause_live") and running:
                 cands.append((point, trig, rng.choice(sorted(running))))
+            elif trig == "detach" and _nonserve(running):
+                cands.append((point, trig, rng.choice(_nonserve(running))))
             elif trig == "unpause" and paused:
                 cands.append((point, trig, rng.choice(sorted(paused))))
             elif trig == "attach" and free > 0:

@@ -175,6 +175,245 @@ class SimTenant:
         self._fail_next = True
 
 
+class SimServeTenant:
+    """A deterministic toy *serving* tenant for the scenario simulator —
+    the serve-plane analogue of ``SimTenant``.
+
+    It mirrors the real ``ServeEngine``'s control flow (queue -> paged
+    admission through the REAL ``serve.paged.BlockAllocator`` -> batched
+    decode over block-table-indirected pages -> slot recycling) over tiny
+    integer arrays, so thousands of scenario ops stay cheap while the
+    allocator and the pause/staging round-trip get real coverage.
+
+    The crucial property (invariant I10): every emitted token is a pure
+    function of the request identity and the CONTENT of the tenant's
+    state arrays — ``expected_output(seed, rid)`` replays the request
+    with no engine at all, so any byte the pause/unpause/migrate paths
+    corrupt in pages/tables/pos/last shows up as token divergence, and a
+    request served across a mid-flight reconfiguration must produce
+    exactly the tokens it would have produced without one.
+    """
+
+    VOCAB = 97
+    PAGE = 4
+    SLOTS = 2
+    MAX_PAGES = 4                         # per-slot table width
+    M = (1 << 31) - 1
+
+    def __init__(self, tid: str, seed: int = 0, *,
+                 clock: Optional[VirtualClock] = None,
+                 placement: str = "first_fit"):
+        from repro.serve.paged import BlockAllocator
+        self.tid = tid
+        self.seed = int(seed)
+        self.clock = clock
+        self.status = "created"
+        self.vf_id: Optional[str] = None
+        self.steps_done = 0
+        self.workload = "serve"
+        self._exec_cache: dict = {}
+        self.step_times: list[float] = []
+        self._fail_next = False
+        self.run = types.SimpleNamespace(
+            model=types.SimpleNamespace(name=f"sim-serve-{tid}"),
+            placement=placement, seed=self.seed)
+        self.num_pages = 1 + self.SLOTS * self.MAX_PAGES
+        self.alloc = BlockAllocator(self.num_pages, self.PAGE)
+        # device state (round-trips through the real staging/pause paths)
+        self.pages = np.zeros((self.num_pages, self.PAGE), np.int64)
+        self.tables = np.zeros((self.SLOTS, self.MAX_PAGES), np.int32)
+        self.pos = np.full((self.SLOTS,), -1, np.int64)
+        self.last = np.zeros((self.SLOTS,), np.int64)
+        # host-side request plane (guest RAM: survives pause like a queue
+        # in the real engine's process)
+        self.queue: "list" = []
+        self.active: list = [None] * self.SLOTS
+        self.requests: list = []          # every request ever submitted
+        self._next_rid = 0
+
+    # ----------------------------------------------------- the toy "model"
+    @classmethod
+    def _cell(cls, tok: int, i: int) -> int:
+        return ((tok + 1) * (2654435761 * (i + 1) % cls.M)) % cls.M
+
+    @classmethod
+    def _digest_tok(cls, cells) -> int:
+        return int(sum(cells) % cls.M) % cls.VOCAB
+
+    @classmethod
+    def make_prompt(cls, seed: int, rid: int) -> tuple:
+        plen = 1 + (rid * 7 + seed) % 5
+        return tuple((seed * 31 + rid * 17 + j * 13) % cls.VOCAB
+                     for j in range(plen))
+
+    @classmethod
+    def make_max_new(cls, seed: int, rid: int) -> int:
+        return 1 + (rid + seed) % 5       # includes prefill-finish (== 1)
+
+    @classmethod
+    def expected_output(cls, seed: int, rid: int) -> list:
+        """Oracle: the tokens this request produces when served with NO
+        mid-flight reconfiguration (pure replay of the recurrence)."""
+        prompt = cls.make_prompt(seed, rid)
+        max_new = cls.make_max_new(seed, rid)
+        cells = [cls._cell(t, i) for i, t in enumerate(prompt)]
+        out = [cls._digest_tok(cells)]
+        while len(out) < max_new:
+            cells.append(cls._cell(out[-1], len(cells)))
+            out.append(cls._digest_tok(cells))
+        return out
+
+    # ---------------------------------------------------------- traffic
+    def submit_burst(self, n: int = 1):
+        """n requests arrive (queueing is guest-side: works while paused)."""
+        for _ in range(n):
+            rid = self._next_rid
+            self._next_rid += 1
+            req = types.SimpleNamespace(
+                rid=rid, prompt=self.make_prompt(self.seed, rid),
+                max_new=self.make_max_new(self.seed, rid),
+                out=[], done=False)
+            self.queue.append(req)
+            self.requests.append(req)
+
+    # page-table helpers over the flat logical view -------------------------
+    def _cells_of(self, slot: int, upto: int):
+        row = self.tables[slot]
+        return [int(self.pages[row[i // self.PAGE], i % self.PAGE])
+                for i in range(upto + 1)]
+
+    def _write(self, slot: int, i: int, val: int):
+        row = self.tables[slot]
+        self.pages[row[i // self.PAGE], i % self.PAGE] = val
+
+    def _admit(self):
+        from repro.serve.paged import CacheExhausted
+        for s in range(self.SLOTS):
+            if self.active[s] is not None:
+                continue
+            while self.queue:
+                req = self.queue[0]
+                need = self.alloc.pages_needed(len(req.prompt)
+                                               + req.max_new)
+                try:
+                    pages = self.alloc.allocate(req.rid, need)
+                except CacheExhausted:
+                    return                      # back off, keep order
+                self.queue.pop(0)
+                self.tables[s, :] = 0
+                self.tables[s, :len(pages)] = pages
+                self.pos[s] = len(req.prompt) - 1
+                for i, t in enumerate(req.prompt):
+                    self._write(s, i, self._cell(t, i))
+                tok = self._digest_tok(self._cells_of(s, self.pos[s]))
+                req.out.append(tok)
+                if len(req.out) >= req.max_new:    # finished at prefill
+                    req.done = True
+                    self.alloc.free(req.rid)
+                    self.tables[s, :] = 0
+                    self.pos[s] = -1
+                    continue                        # slot re-offered
+                self.last[s] = tok
+                self.active[s] = req
+                break
+
+    def _engine_step(self):
+        self._admit()
+        for s in range(self.SLOTS):
+            req = self.active[s]
+            if req is None:
+                continue
+            self.pos[s] += 1
+            self._write(s, int(self.pos[s]),
+                        self._cell(int(self.last[s]), int(self.pos[s])))
+            tok = self._digest_tok(self._cells_of(s, int(self.pos[s])))
+            req.out.append(tok)
+            self.last[s] = tok
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.alloc.free(req.rid)
+                self.active[s] = None
+                self.tables[s, :] = 0
+                self.pos[s] = -1
+
+    # ------------------------------------------------------------- protocol
+    def bind(self, vf: VirtualFunction, state=None, *,
+             flash: bool = True) -> float:
+        if state is not None:
+            self.pages = np.array(state["pages"], np.int64)
+            self.tables = np.array(state["tables"], np.int32)
+            self.pos = np.array(state["pos"], np.int64)
+            self.last = np.array(state["last"], np.int64)
+        key = (tuple(vf.mesh_shape), tuple(str(d) for d in vf.devices))
+        self._exec_cache.setdefault(key, True)
+        self.vf_id = vf.vf_id
+        self.status = "running"
+        vf.emulated.update({"tenant": self.tid, "status": "running",
+                            "steps_done": self.steps_done})
+        return 0.0
+
+    def run_steps(self, n: int = 1) -> dict:
+        if self.status == "paused":
+            raise DevicePausedError(
+                f"{self.tid}: device {self.vf_id} is paused")
+        if self.status != "running":
+            raise RuntimeError(f"{self.tid}: no device attached")
+        if self._fail_next:
+            self._fail_next = False
+            raise RuntimeError(f"{self.tid}: injected device failure")
+        for _ in range(n):
+            self._engine_step()
+            self.steps_done += 1
+            if self.clock is not None:
+                self.clock.advance(SimTenant.STEP_COST)
+            self.step_times.append(SimTenant.STEP_COST)
+        return {"inflight": sum(r is not None for r in self.active),
+                "queued": len(self.queue)}
+
+    def export_state(self):
+        return {"pages": self.pages, "tables": self.tables,
+                "pos": self.pos, "last": self.last}
+
+    def export_specs(self):
+        return {}
+
+    def shardings_for(self, vf: VirtualFunction):
+        return None
+
+    def state_template(self):
+        return jax.tree.map(np.zeros_like, {
+            "pages": np.zeros((self.num_pages, self.PAGE), np.int64),
+            "tables": np.zeros((self.SLOTS, self.MAX_PAGES), np.int32),
+            "pos": np.zeros((self.SLOTS,), np.int64),
+            "last": np.zeros((self.SLOTS,), np.int64)})
+
+    def suspend(self):
+        self.pages = self.tables = None
+        self.pos = self.last = None
+        self.status = "paused"
+
+    def resume(self, state, vf: VirtualFunction):
+        self.status = "running"
+        self.bind(vf, state=state)
+
+    def detach(self):
+        self.pages = self.tables = None
+        self.pos = self.last = None
+        self.vf_id = None
+        self.status = "detached"
+
+    def query(self) -> dict:
+        return {"tenant": self.tid, "status": self.status,
+                "vf": self.vf_id, "steps_done": self.steps_done,
+                "workload": self.workload,
+                "queued": len(self.queue),
+                "inflight": sum(r is not None for r in self.active),
+                "exec_keys": [list(map(str, k)) for k in self._exec_cache]}
+
+    def inject_failure(self):
+        self._fail_next = True
+
+
 class ServeSimTenant:
     """Serving-shaped pause-protocol stub: big IMMUTABLE params plus a
     small hot cache that every decode step replaces — the exact dirty

@@ -139,3 +139,36 @@ def make_serve_steps(run: RunConfig, rules: Optional[ShardingRules] = None):
             return model.decode_step(params, cache, tokens, pos)
 
     return prefill, decode
+
+
+def make_decode_step(run: RunConfig,
+                     rules: Optional[ShardingRules] = None, *,
+                     paged: bool = False):
+    """Continuous-batching decode step with an active-slot mask; with
+    ``paged`` the cache is the paged-KV page pool and a block table rides
+    along (see ``Model.decode_step``)."""
+    model = build_model(run)
+
+    if paged:
+        def decode(params, cache, tokens, pos, tables, active):
+            with sharding_scope(rules):
+                return model.decode_step(params, cache, tokens, pos,
+                                         tables=tables, active=active)
+    else:
+        def decode(params, cache, tokens, pos, active):
+            with sharding_scope(rules):
+                return model.decode_step(params, cache, tokens, pos,
+                                         active=active)
+    return decode
+
+
+def make_prefill_chunk(run: RunConfig,
+                       rules: Optional[ShardingRules] = None):
+    """Chunked-prefill step (attention-pattern stacks only)."""
+    model = build_model(run)
+
+    def chunk(params, cache, tokens, offset):
+        with sharding_scope(rules):
+            return model.prefill_chunk(params, cache, tokens, offset)
+
+    return chunk

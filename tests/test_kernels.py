@@ -8,6 +8,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import flash_decode
+from repro.kernels.paged_decode import paged_decode
 from repro.kernels.qdma_pack import qdma_pack, qdma_unpack
 from repro.kernels.ssm_scan import ssm_scan
 
@@ -85,6 +86,54 @@ def test_flash_decode_matches_flash_attention_last_row():
     full = flash_attention(q, k, v, causal=True, interpret=True)
     dec = flash_decode(q[:, -1:], k, v, S - 1, interpret=True)
     np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,hd,page,NP,P,positions", [
+    (1, 4, 4, 64, 16, 4, 8, (63,)),          # MHA, full view valid
+    (3, 4, 2, 64, 8, 4, 16, (5, -1, 31)),    # GQA, one inactive slot
+    (2, 8, 2, 128, 32, 2, 5, (0, 40)),       # MQA-ish wide head
+    (2, 2, 1, 64, 8, 8, 17, (-1, -1)),       # all slots inactive
+])
+def test_paged_decode_sweep(B, H, K, hd, page, NP, P, positions, dtype):
+    ks = jax.random.split(jax.random.key(4), 3)
+    q = rand(ks[0], (B, 1, H, hd), dtype)
+    kp = rand(ks[1], (P, page, K, hd), dtype)
+    vp = rand(ks[2], (P, page, K, hd), dtype)
+    rng = np.random.default_rng(0)
+    # arbitrary page ids (reads may alias; page 0 stays reserved for writes)
+    tables = jnp.asarray(rng.integers(1, P, (B, NP)), jnp.int32)
+    pos = jnp.asarray(positions, jnp.int32)
+    out = paged_decode(q, kp, vp, tables, pos, interpret=True)
+    want = ref.paged_decode_ref(q, kp, vp, tables, pos)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+    # inactive slots produce exactly-zero rows in BOTH implementations
+    for b, p in enumerate(positions):
+        if p < 0:
+            assert np.all(np.asarray(out[b]) == 0)
+            assert np.all(np.asarray(want[b]) == 0)
+
+
+def test_paged_decode_matches_flash_decode_contiguous_view():
+    """With an identity-ordered table the paged kernel equals flash_decode
+    over the gathered contiguous cache."""
+    ks = jax.random.split(jax.random.key(5), 3)
+    page, NP, P, K, hd = 32, 4, 9, 2, 64
+    q = rand(ks[0], (1, 1, 4, hd), jnp.float32)
+    kp = rand(ks[1], (P, page, K, hd), jnp.float32)
+    vp = rand(ks[2], (P, page, K, hd), jnp.float32)
+    tables = jnp.asarray([[3, 1, 8, 5]], jnp.int32)
+    pos = 77
+    out = paged_decode(q, kp, vp, tables, jnp.asarray([pos], jnp.int32),
+                       interpret=True)
+    k = kp[tables[0]].reshape(1, NP * page, K, hd)
+    v = vp[tables[0]].reshape(1, NP * page, K, hd)
+    want = flash_decode(q, k, v, pos, block_k=page, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                atol=2e-5, rtol=2e-5)
 
 
