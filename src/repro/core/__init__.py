@@ -4,6 +4,9 @@ DevicePool (PF) -> VirtualFunction slices -> Tenants (VMs), with the novel
 pause/unpause mechanism, init/reconf automation, QMP-style control plane,
 and fault-tolerance built on the same snapshot machinery.
 """
+from repro.core.autoscaler import (Autoscaler, AutoscaleAction,
+                                   AutoscaleConfig, EngineStats,
+                                   TelemetrySnapshot, justify_action)
 from repro.core.fault import (CrashPlane, HeartbeatMonitor, InjectedCrash,
                               Supervisor, crash_plane, crashpoint)
 from repro.core.journal import OpJournal
@@ -21,7 +24,9 @@ from repro.core.tenant import DevicePausedError, Tenant
 from repro.core.vf import VFState, VFTransitionError, VirtualFunction
 
 __all__ = [
-    "AdmissionError", "ConfigSpaceSnapshot", "ControlPlane", "CrashPlane",
+    "AdmissionError", "Autoscaler", "AutoscaleAction", "AutoscaleConfig",
+    "ConfigSpaceSnapshot", "ControlPlane", "CrashPlane", "EngineStats",
+    "TelemetrySnapshot", "justify_action",
     "DevicePausedError", "DevicePool", "HeartbeatMonitor", "InjectedCrash",
     "ManagerError", "OpJournal", "PauseError", "PhaseTimings",
     "PlacementRequest", "PoolError", "POLICY_NAMES", "RecordStore",

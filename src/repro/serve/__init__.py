@@ -1,10 +1,12 @@
 """Serving substrate: continuous-batching engine (dense or paged KV),
-block allocator, and the multi-tenant fleet under the SVFF manager."""
+block allocator, the multi-tenant fleet under the SVFF manager, and the
+telemetry bus feeding the elastic autoscaler (``core.autoscaler``)."""
 from repro.serve.engine import DrainResult, Request, ServeEngine
 from repro.serve.fleet import EngineTenant, ServeFleet
 from repro.serve.paged import (BlockAllocator, CacheExhausted,
                                RequestRejected)
+from repro.serve.telemetry import MetricsBus, percentile
 
 __all__ = ["BlockAllocator", "CacheExhausted", "DrainResult",
-           "EngineTenant", "Request", "RequestRejected", "ServeEngine",
-           "ServeFleet"]
+           "EngineTenant", "MetricsBus", "Request", "RequestRejected",
+           "ServeEngine", "ServeFleet", "percentile"]

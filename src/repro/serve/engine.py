@@ -481,7 +481,12 @@ class ServeEngine:
     def import_state(self, st: dict):
         if "params" in st:
             self.params = st["params"]
-        self._cache = st["cache"]
+        # restored cache leaves may be host numpy (zero-copy staging
+        # transport); admit_kv/reset_slot_state index with .at[], so
+        # re-materialize as jax arrays here rather than crashing on the
+        # first admission after an unpause
+        self._cache = (None if st["cache"] is None else
+                       jax.tree.map(jnp.asarray, st["cache"]))
         # restored host arrays may be read-only views (zero-copy staging
         # transport); the engine mutates these in place, so copy
         self.pos = np.array(st["pos"], np.int64)

@@ -17,21 +17,43 @@ traffic keeps arriving. The fleet packages exactly that:
                  THROUGH ``pause_live``/``migrate`` — the pre-copy rounds
                  step the victim engine itself, so reconfiguration fires
                  mid-traffic, which is the whole point.
+
+On top of the on-request reconfiguration surface sits the elastic SLO
+control plane: a ``MetricsBus`` (``serve/telemetry.py``) samples per-
+engine load and latency windows on the hot path, and ``autoscale_step``
+feeds one snapshot per epoch to the ``core.autoscaler`` policy loop,
+executing its actions through the SAME journaled manager ops —
+
+  scale_out   attach a parked/fresh ``EngineTenant`` to a free VF, or run
+              the paper's full reconf cycle to carve one more VF
+  scale_in    detach an idle engine (state parks on disk; its VF keeps
+              its devices and becomes the next scale_out's cheap path)
+  rebalance   move queued requests hot -> cold (they have emitted
+              nothing, so moving them is token-identical) and migrate the
+              hot victim onto fresh devices without dropping its batch
+
+— so crash recovery (PR 3's journal + ``SVFFManager.recover``) covers
+autoscaler-initiated reconfiguration for free.
 """
 from __future__ import annotations
 
+import collections
 import types
 from typing import Optional
 
 import jax
 import numpy as np
 
-from repro.core.manager import SVFFManager
+from repro.core.autoscaler import (Autoscaler, AutoscaleAction,
+                                   AutoscaleConfig, EngineStats,
+                                   TelemetrySnapshot)
+from repro.core.manager import ManagerError, SVFFManager
 from repro.core.pool import DevicePool
 from repro.core.tenant import DevicePausedError
-from repro.core.vf import VirtualFunction
+from repro.core.vf import VFState, VirtualFunction
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.paged import RequestRejected
+from repro.serve.telemetry import MetricsBus
 
 
 class EngineTenant:
@@ -79,10 +101,11 @@ class EngineTenant:
 
     # -- pause protocol ------------------------------------------------------
     def export_state(self):
+        # a never-stepped engine must still export a structurally complete
+        # state: the detach path round-trips it through CheckpointStore
+        # against state_template(), which includes the cache leaves
+        self.engine._ensure_cache()
         st = self.engine.export_state()
-        # cache the restore template only once the engine has a real
-        # cache (a fresh engine exports cache=None, which would freeze a
-        # template missing every cache leaf); shapes are stable after
         if self._template is None and st.get("cache") is not None:
             self._template = jax.tree.map(
                 lambda x: np.zeros(getattr(x, "shape", ()),
@@ -98,7 +121,6 @@ class EngineTenant:
 
     def state_template(self):
         if self._template is None:
-            self.engine._ensure_cache()
             self.export_state()
         if self._template is None:
             raise RuntimeError(
@@ -155,50 +177,95 @@ class ServeFleet:
                  slots: int = 4, max_len: int = 256, paged: bool = True,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: int = 0, slo_max_load: int = 64,
-                 workdir: str = "/tmp/svff_fleet", devices=None):
+                 workdir: str = "/tmp/svff_fleet", devices=None,
+                 autoscale: Optional[AutoscaleConfig] = None,
+                 spare_engines: int = 0, num_vfs: Optional[int] = None):
         self.run = run
         self.slo_max_load = slo_max_load
         devices = (tuple(devices) if devices is not None else
                    tuple(f"fleetdev{i}" for i in range(num_devices)))
-        self.pool = DevicePool(devices=devices, max_vfs=max(num_engines, 1))
+        # the VF cap is the DEVICE budget (>= 1 device per VF), not the
+        # initial engine count — capping at num_engines made every later
+        # reconfiguration to more VFs silently impossible
+        self.pool = DevicePool(devices=devices,
+                               max_vfs=max(len(devices), 1))
         self.mgr = SVFFManager(self.pool, workdir=workdir, scheduler=policy)
         self.tenants: dict[str, EngineTenant] = {}
-        # each tenant OWNS its device state: a pause deletes the exported
-        # leaves after staging them, so engines must not alias one params
-        # pytree (guest isolation, like VMs not sharing guest RAM)
-        engines = [
-            ServeEngine(run, jax.tree.map(jax.numpy.array, params),
-                        slots=slots, max_len=max_len,
-                        paged=paged, page_size=page_size,
-                        num_pages=num_pages, prefill_chunk=prefill_chunk)
-            for _ in range(num_engines)]
-        tns = [EngineTenant(f"serve{i}", eng, placement=policy)
-               for i, eng in enumerate(engines)]
-        for tn in tns:
-            self.tenants[tn.tid] = tn
-        self.mgr.init(num_engines, tns)
-        self._rejected: list[Request] = []
+        self._order: dict[str, int] = {}        # tid -> creation index
+        self._policy = policy
+        self._params_src = params
+        self._engine_kw = dict(slots=slots, max_len=max_len, paged=paged,
+                               page_size=page_size, num_pages=num_pages,
+                               prefill_chunk=prefill_chunk)
+        # pre-carving MORE VFs than engines (``num_vfs``) gives scale-out
+        # a pause-free path: attaching to an existing detached VF never
+        # interrupts the running engines, whereas growing the partition
+        # runs the paper's full reconf cycle (brief pause of every
+        # engine) — exactly the SR-IOV spare-VF provisioning pattern
+        tns = [self._spawn_tenant() for _ in range(num_engines)]
+        self.mgr.init(max(num_vfs or num_engines, num_engines), tns)
+        # parked standbys: spawned (own params copy, own executables when
+        # warmed) but not attached — the autoscaler's cheap scale-out pool
+        for _ in range(spare_engines):
+            self._spawn_tenant()
+        self.telemetry = MetricsBus()
+        self.autoscale_config = autoscale
+        self.autoscaler = Autoscaler(autoscale) if autoscale else None
+        self._epoch = 0
+        self._harvested: dict[str, int] = {}   # tid -> _finished scanned
+        #: fleet-side rejection ledger (the REQUEST is never mutated).
+        #: One entry per rejected SUBMISSION — a caller retrying the same
+        #: request K times logs K attempts — bounded so a long-lived
+        #: fleet cannot leak; ``rejected_total`` is the running count
+        self.rejections: collections.deque = collections.deque(maxlen=512)
+        self.rejected_total = 0
+
+    def _spawn_tenant(self) -> EngineTenant:
+        """Create one engine tenant (own params copy: a pause deletes the
+        exported leaves, so engines must not alias one pytree — guest
+        isolation, like VMs not sharing guest RAM)."""
+        i = len(self._order)
+        eng = ServeEngine(self.run,
+                          jax.tree.map(jax.numpy.array, self._params_src),
+                          **self._engine_kw)
+        tn = EngineTenant(f"serve{i}", eng, placement=self._policy)
+        self.tenants[tn.tid] = tn
+        self._order[tn.tid] = i
+        return tn
 
     # -- traffic --------------------------------------------------------------
     def submit(self, req: Request) -> str:
         """SLO-aware admission: the request goes to the least-loaded
         attached engine; if even that one is past ``slo_max_load``, the
         request is rejected NOW (typed) rather than queued into an SLO
-        miss. Paused engines still accept traffic (their queue holds) but
-        running ones are preferred."""
+        miss. Rejection is side-effect-free on the request — the caller
+        may retry the SAME object after backoff — and is tracked fleet-
+        side (``self.rejections`` + telemetry). Paused engines still
+        accept traffic (their queue holds) but running ones are
+        preferred. Load ties break on engine CREATION index, not tid
+        string order, so a 12-engine fleet fills serve0..serve11 in
+        order instead of serve0, serve1, serve10, serve11, serve2, ..."""
         cands = [tn for tn in self.tenants.values()
                  if tn.status in ("running", "paused")]
         if not cands:
+            self.rejected_total += 1
+            self.rejections.append({"rid": req.rid, "engine": None,
+                                    "reason": "no serving engines"})
             raise RequestRejected(f"request {req.rid}: no serving engines")
         running = [tn for tn in cands if tn.status == "running"]
-        pick = min(running or cands, key=lambda tn: (tn.load, tn.tid))
+        pick = min(running or cands,
+                   key=lambda tn: (tn.load, self._order[tn.tid]))
         if pick.load >= self.slo_max_load:
-            req.done = True
-            req.error = (f"SLO admission: engine {pick.tid} at load "
-                         f"{pick.load} >= {self.slo_max_load}")
-            self._rejected.append(req)
-            raise RequestRejected(req.error)
+            self.telemetry.record_reject(pick.tid)
+            self.rejected_total += 1
+            self.rejections.append({"rid": req.rid, "engine": pick.tid,
+                                    "load": pick.load,
+                                    "reason": "slo_max_load"})
+            raise RequestRejected(
+                f"SLO admission: engine {pick.tid} at load {pick.load} "
+                f">= {self.slo_max_load} (request {req.rid})")
         pick.engine.submit(req)
+        self.telemetry.record_submit(pick.tid)
         return pick.tid
 
     def step(self) -> int:
@@ -208,13 +275,28 @@ class ServeFleet:
         for tn in self.tenants.values():
             if tn.status == "running":
                 active += tn.run_steps(1)["active"]
+                self.telemetry.record_load(tn.tid, tn.load,
+                                           len(tn.engine.queue))
+                # harvest only the suffix of _finished not yet scanned —
+                # the list is cleared by drain, and rescanning it whole
+                # would make the hot path O(completed history)
+                done = len(tn.engine._finished)
+                seen = self._harvested.get(tn.tid, 0)
+                if done < seen:
+                    # someone drained the engine directly: rescan from
+                    # the start (MetricsBus.harvest dedups by request)
+                    seen = 0
+                if done > seen:
+                    self.telemetry.harvest(tn.tid,
+                                           tn.engine._finished[seen:])
+                self._harvested[tn.tid] = done
         return active
 
     def drain(self, max_steps: int = 10_000) -> "DrainResult":
         """Serve until every RUNNING engine is idle; returns the finished
-        (and SLO-rejected) requests. ``.drained`` is False when work is
-        stranded — on a still-paused engine, or because max_steps ran
-        out — mirroring ``ServeEngine.run_until_idle``."""
+        requests. ``.drained`` is False when work is stranded — on a
+        still-paused engine, or because max_steps ran out — mirroring
+        ``ServeEngine.run_until_idle``."""
         from repro.serve.engine import DrainResult
         done: list[Request] = []
         for _ in range(max_steps):
@@ -226,10 +308,11 @@ class ServeFleet:
         pending = False
         for tn in self.tenants.values():
             res = tn.engine.run_until_idle(max_steps=0)
+            self.telemetry.harvest(tn.tid, res)
+            self.telemetry.drained(tn.tid)
+            self._harvested[tn.tid] = 0        # _finished was emptied
             done.extend(res)
             pending |= not res.drained
-        done.extend(self._rejected)
-        self._rejected = []
         return DrainResult(done, drained=not pending)
 
     # -- reconfiguration under traffic ----------------------------------------
@@ -247,7 +330,130 @@ class ServeFleet:
     def migrate(self, tid: str):
         return self.mgr.migrate(self.tenants[tid])
 
+    # -- the elastic control plane --------------------------------------------
+    def _free_vfs(self) -> list:
+        """Attachable VFs: detached, unowned, still holding devices. One
+        predicate for BOTH the snapshot the planner reads and the VF
+        scale_out picks, so plan and execution criteria cannot drift."""
+        return [vf for vf in self.pool.vfs.values()
+                if vf.state == VFState.DETACHED and vf.owner is None
+                and vf.devices]
+
+    def telemetry_snapshot(self) -> TelemetrySnapshot:
+        """One observation epoch: per-engine stats + the capacity facts
+        that gate scale-out. Cheap (counters + window percentiles)."""
+        self._epoch += 1
+        stats = []
+        for tid, tn in self.tenants.items():
+            eng = tn.engine
+            stats.append(EngineStats(
+                tid=tid, index=self._order[tid], status=tn.status,
+                load=tn.load, queue_depth=len(eng.queue),
+                inflight=sum(r is not None for r in eng.active),
+                prefill_jobs=len(eng._jobs),
+                ttft_p95_ms=self.telemetry.ttft_ms(tid),
+                itl_p95_ms=self.telemetry.itl_ms(tid),
+                rejected=self.telemetry.rejected[tid]))
+        return TelemetrySnapshot(
+            epoch=self._epoch, slo_max_load=self.slo_max_load,
+            engines=tuple(stats), free_vfs=len(self._free_vfs()),
+            grow_budget=max(0, self.pool.num_devices - len(self.pool.vfs)),
+            rejected_recent=self.telemetry.take_rejected_recent())
+
+    def autoscale_step(self) -> Optional[AutoscaleAction]:
+        """One policy-loop epoch: snapshot -> plan -> execute. Returns the
+        executed action (None on a quiet/cooldown epoch). Every executed
+        action flows through journaled manager ops, so a crash mid-action
+        recovers exactly like a crash mid-reconf (I8/I9)."""
+        if self.autoscaler is None:
+            raise ValueError(
+                "fleet built without autoscale=AutoscaleConfig(...)")
+        action = self.autoscaler.observe(self.telemetry_snapshot())
+        if action is None:
+            return None
+        if action.kind == "scale_out":
+            self.scale_out()
+        elif action.kind == "scale_in":
+            self.scale_in(action.victim)
+        else:
+            self.rebalance(action.victim, action.target)
+        return action
+
+    def scale_out(self) -> str:
+        """Bring one more engine into service: re-attach the oldest parked
+        tenant (or spawn a fresh one) onto a free VF; when no detached VF
+        exists, run the paper's full reconf cycle to carve one more
+        (running engines pause briefly — their queues hold — and resume
+        on the new partition)."""
+        free = self._free_vfs()
+        n = len(self.pool.vfs) + 1
+        if not free and n > self.pool.num_devices:
+            # validate BEFORE spawning: a fresh tenant registered here
+            # would leak (params copy + a never-attachable fleet entry)
+            raise ManagerError(
+                f"scale_out: {n} VFs exceed the device budget "
+                f"({self.pool.num_devices})")
+        parked = sorted((tn for tn in self.tenants.values()
+                         if tn.status in ("created", "detached")),
+                        key=lambda tn: self._order[tn.tid])
+        tn = parked[0] if parked else self._spawn_tenant()
+        if free:
+            self.mgr.attach(tn)
+        else:
+            self.mgr.reconf(n, new_tenants=[tn],
+                            devices_per_vf=max(
+                                1, self.pool.num_devices // n))
+        # the new engine takes queued (not-yet-admitted) work off the
+        # hottest engine immediately — otherwise it idles until the next
+        # rebalance epoch while the hot queue keeps missing SLO
+        hot = max((t for t in self.tenants.values()
+                   if t.status == "running" and t.tid != tn.tid),
+                  key=lambda t: (t.load, -self._order[t.tid]),
+                  default=None)
+        if hot is not None and hot.engine.queue:
+            self.rebalance(hot.tid, tn.tid, migrate=False)
+        return tn.tid
+
+    def scale_in(self, tid: str) -> str:
+        """Park an IDLE engine: journaled detach (state snapshots to
+        disk, the VF keeps its devices and becomes attachable). Refuses
+        while the engine holds ANY work — queued, in-flight prefill, or
+        active decode slots — those requests would strand."""
+        tn = self.tenants[tid]
+        if tn.status != "running":
+            raise ManagerError(f"scale_in: {tid} is {tn.status}")
+        if tn.load:      # load = queued + in-flight prefill + active slots
+            raise ManagerError(
+                f"scale_in: {tid} is busy (load {tn.load}, "
+                f"{len(tn.engine._jobs)} prefill jobs)")
+        self.mgr.detach(tn)
+        return tid
+
+    def rebalance(self, src: str, dst: str,
+                  migrate: Optional[bool] = None) -> int:
+        """Move queued (not-yet-admitted) requests from the hot engine to
+        the cold one — they have emitted nothing, so replacement is
+        token-identical — then migrate the hot victim onto fresh devices
+        (pause -> reallocate -> unpause keeps its in-flight batch).
+        Returns the number of requests moved."""
+        s, d = self.tenants[src], self.tenants[dst]
+        moved = 0
+        while s.engine.queue and s.load - d.load > 1:
+            # steal from the BACK: the oldest requests keep their engine
+            d.engine.submit(s.engine.queue.pop())
+            moved += 1
+        if migrate is None:
+            migrate = (self.autoscale_config.rebalance_migrate
+                       if self.autoscale_config else True)
+        if migrate and s.status == "running":
+            self.mgr.migrate(s)
+        return moved
+
     def query(self) -> dict:
         return {"manager": self.mgr.query(),
                 "engines": {tid: tn.query()
-                            for tid, tn in self.tenants.items()}}
+                            for tid, tn in self.tenants.items()},
+                "telemetry": self.telemetry.describe(),
+                "rejections": self.rejected_total,
+                "autoscale_actions": (len(self.autoscaler.history)
+                                      if self.autoscaler else 0)}

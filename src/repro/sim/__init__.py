@@ -45,17 +45,19 @@ from repro.sim.chaos import (CRASH_POINTS, CrashSpec, crash_matrix,
 from repro.sim.clock import VirtualClock
 from repro.sim.harness import (OpResult, ScenarioResult, ScenarioRunner,
                                run_scenario)
-from repro.sim.invariants import (InvariantViolation, check_invariants,
-                                  check_pause_timings, check_timings)
-from repro.sim.scenario import (Op, OP_KINDS, ScenarioConfig,
-                                generate_scenario)
+from repro.sim.invariants import (InvariantViolation, check_autoscale,
+                                  check_invariants, check_pause_timings,
+                                  check_timings)
+from repro.sim.scenario import (ARRIVAL_PATTERNS, Op, OP_KINDS,
+                                ScenarioConfig, generate_scenario)
 from repro.sim.tenant import ServeSimTenant, SimServeTenant, SimTenant
 
 __all__ = [
-    "CRASH_POINTS", "CrashSpec", "InvariantViolation", "Op", "OP_KINDS",
-    "OpResult", "ScenarioConfig", "ScenarioResult", "ScenarioRunner",
-    "ServeSimTenant", "SimServeTenant", "SimTenant", "VirtualClock",
-    "check_invariants", "check_pause_timings", "check_timings",
-    "crash_matrix", "generate_scenario", "recover_manager",
-    "run_crash_case", "run_scenario", "state_fingerprint",
+    "ARRIVAL_PATTERNS", "CRASH_POINTS", "CrashSpec", "InvariantViolation",
+    "Op", "OP_KINDS", "OpResult", "ScenarioConfig", "ScenarioResult",
+    "ScenarioRunner", "ServeSimTenant", "SimServeTenant", "SimTenant",
+    "VirtualClock", "check_autoscale", "check_invariants",
+    "check_pause_timings", "check_timings", "crash_matrix",
+    "generate_scenario", "recover_manager", "run_crash_case",
+    "run_scenario", "state_fingerprint",
 ]

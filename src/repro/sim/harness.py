@@ -23,6 +23,8 @@ import time
 import zlib
 from typing import Optional
 
+from repro.core.autoscaler import (Autoscaler, AutoscaleConfig,
+                                   EngineStats, TelemetrySnapshot)
 from repro.core.fault import Supervisor
 from repro.core.manager import ManagerError, SVFFManager
 from repro.core.pool import DevicePool, PoolError
@@ -30,11 +32,12 @@ from repro.core.pause import PauseError
 from repro.core.records import RecordError
 from repro.core.staging import StagingEngine
 from repro.core.tenant import DevicePausedError
-from repro.core.vf import VFTransitionError
+from repro.core.vf import VFState, VFTransitionError
 from repro.sim.chaos import _fire, recover_manager
 from repro.sim.clock import VirtualClock
-from repro.sim.invariants import (InvariantViolation, check_invariants,
-                                  check_pause_timings, check_timings)
+from repro.sim.invariants import (InvariantViolation, check_autoscale,
+                                  check_invariants, check_pause_timings,
+                                  check_timings)
 from repro.sim.scenario import Op, ScenarioConfig, generate_scenario
 from repro.sim.tenant import SimServeTenant, SimTenant
 
@@ -85,6 +88,16 @@ class ScenarioResult:
         return f"{zlib.crc32('|'.join(parts).encode()):08x}"
 
 
+#: policy-loop sizing for sim serving tenants (SimServeTenant has 2 slots
+#: and bursts of up to ~12, so hot = load >= ceil(0.75 * 6) = 5)
+SIM_SLO_MAX_LOAD = 6
+#: sv0 is the scenario's fixed traffic ingress (serve_submit/serve_step
+#: target it by name), so it is pinned against scale_in
+SIM_AUTOSCALE = AutoscaleConfig(hysteresis=1, cooldown=1,
+                                rebalance_gap=4, max_engines=4,
+                                pinned=("sv0",))
+
+
 class ScenarioRunner:
     def __init__(self, cfg: ScenarioConfig, workdir: Optional[str] = None):
         self.cfg = cfg
@@ -94,6 +107,9 @@ class ScenarioRunner:
         self.sup: Optional[Supervisor] = None
         self.tenants: dict[str, SimTenant] = {}
         self.expected_steps: dict[str, int] = {}
+        self.autoscaler = Autoscaler(SIM_AUTOSCALE)
+        self._as_epoch = 0
+        self._last_autoscale = None       # pending I11 check
 
     # ----------------------------------------------------------------- ops
     def _tenant(self, tid: str) -> SimTenant:
@@ -184,8 +200,20 @@ class ScenarioRunner:
             # guest-side queueing — legal even while the engine is paused
             self._tenant(op.tenant).submit_burst(op.burst)
         elif op.kind == "serve_step":
+            # the named tenant first — preserving the rejection behaviour
+            # when it is paused — then every other running serving tenant
+            # (autoscaled engines share the drive loop)
             self._tenant(op.tenant).run_steps(op.steps)
             self.expected_steps[op.tenant] += op.steps
+            for tid in sorted(self.tenants):
+                tn = self.tenants[tid]
+                if (tid != op.tenant and tid.startswith("sv")
+                        and tn.status == "running"):
+                    tn.run_steps(op.steps)
+                    self.expected_steps[tid] += op.steps
+        elif op.kind == "autoscale":
+            self._autoscale_step()
+            clock.advance(0.005)
         elif op.kind == "crash":
             # kill the manager at the named crash point mid-trigger-op,
             # then rebuild it via SVFFManager.recover (with the I9
@@ -202,6 +230,77 @@ class ScenarioRunner:
         else:
             raise ValueError(f"unknown op {op.kind}")
         return None
+
+    # ------------------------------------------------------- elastic plane
+    def _serve_tenants(self) -> list:
+        return [self.tenants[tid] for tid in sorted(self.tenants)
+                if tid.startswith("sv")]
+
+    def _autoscale_snapshot(self) -> TelemetrySnapshot:
+        """Telemetry over the serving tenants: load = guest-side queue +
+        in-flight slots. ``grow_budget`` is 0 — the sim's executor only
+        takes the cheap path (attach to an existing free VF), it never
+        runs a grow-reconf, and the planner must know that."""
+        self._as_epoch += 1
+        stats = []
+        for tn in self._serve_tenants():
+            queued = len(tn.queue) if tn.queue is not None else 0
+            inflight = (sum(r is not None for r in tn.active)
+                        if tn.active is not None else 0)
+            stats.append(EngineStats(
+                tid=tn.tid, index=int(tn.tid[2:] or 0), status=tn.status,
+                load=queued + inflight, queue_depth=queued,
+                inflight=inflight, prefill_jobs=0))
+        pool = self.mgr.pool
+        free_vfs = sum(1 for vf in pool.vfs.values()
+                       if vf.state == VFState.DETACHED
+                       and vf.owner is None and vf.devices)
+        return TelemetrySnapshot(
+            epoch=self._as_epoch, slo_max_load=SIM_SLO_MAX_LOAD,
+            engines=tuple(stats), free_vfs=free_vfs, grow_budget=0)
+
+    def _autoscale_step(self):
+        """One policy-loop epoch over the serving tenants. The planned
+        action is remembered for the I11 check that runs with the post-op
+        invariants (so a violation carries the seed/op# tag), then
+        executed through the ordinary journaled manager ops."""
+        action = self.autoscaler.observe(self._autoscale_snapshot())
+        if action is None:
+            return
+        self._last_autoscale = (action, self.autoscaler.cfg)
+        if action.kind == "scale_out":
+            # prefer re-attaching a previously scaled-in tenant (its
+            # state restores from the detach snapshot) over minting one
+            parked = [tn.tid for tn in self._serve_tenants()
+                      if tn.status == "detached"]
+            nxt = 1 + max((int(tn.tid[2:] or 0)
+                           for tn in self._serve_tenants()), default=0)
+            new = self._tenant(parked[0] if parked else f"sv{nxt}")
+            self.mgr.attach(new)
+            # like the fleet: the fresh engine immediately takes queued
+            # work off the hottest serving tenant (queued requests have
+            # emitted nothing, so moving them is I10-safe)
+            def _load(tn):
+                return (len(tn.queue)
+                        + sum(r is not None for r in tn.active))
+            hot = max((tn for tn in self._serve_tenants()
+                       if tn.status == "running" and tn.tid != new.tid),
+                      key=_load, default=None)
+            while (hot is not None and hot.queue
+                   and _load(hot) - _load(new) > 1):
+                new.queue.append(hot.queue.pop())
+        elif action.kind == "scale_in":
+            self.mgr.detach(self.tenants[action.victim])
+        else:                                     # rebalance
+            src = self.tenants[action.victim]
+            dst = self.tenants[action.target]
+            while src.queue and (len(src.queue)
+                                 + sum(r is not None for r in src.active)
+                                 - len(dst.queue)
+                                 - sum(r is not None for r in dst.active)
+                                 ) > 1:
+                dst.queue.append(src.queue.pop())
+            self.mgr.migrate(src)
 
     # ----------------------------------------------------------------- run
     def run(self) -> ScenarioResult:
@@ -231,6 +330,10 @@ class ScenarioRunner:
                 try:
                     check_invariants(self.mgr)
                     self._check_step_counters()
+                    if self._last_autoscale is not None:
+                        act, cfg = self._last_autoscale
+                        self._last_autoscale = None
+                        check_autoscale(act, cfg)      # I11
                 except InvariantViolation as e:
                     raise InvariantViolation(
                         f"seed={self.cfg.seed} policy={self.cfg.policy} "

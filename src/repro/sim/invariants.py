@@ -37,6 +37,14 @@
       request's output is identical with and without a pause/pause_live/
       migrate mid-flight; any byte corrupted in the paged KV state by a
       reconfiguration round-trip surfaces here as token divergence
+  I11 autoscale justification (``check_autoscale``, run by the harness
+      after every autoscale op): every action the autoscaler took must be
+      justified by the telemetry snapshot it read — scale_out only with a
+      hot engine AND spare capacity, scale_in only of an idle victim
+      above the floor, rebalance only across a real hot/cold gap with
+      queued work to move. Paired with I10 (checked after the same op),
+      this is the claim that the control plane never reconfigures without
+      telemetry evidence and never perturbs a token stream doing so
 
 Violations raise ``InvariantViolation`` tagged by the caller with the
 scenario seed and op index, which is all that is needed to reproduce.
@@ -191,7 +199,10 @@ def check_invariants(mgr) -> None:
         if not hasattr(tn, "expected_output"):
             continue
         for req in getattr(tn, "requests", ()):
-            want = tn.expected_output(tn.seed, req.rid)
+            # the oracle replays from the seed the request was MINTED
+            # under — a rebalance may have handed it to another tenant
+            want = tn.expected_output(getattr(req, "seed", tn.seed),
+                                      req.rid)
             got = list(req.out)
             if req.done and got != want:
                 _fail(f"I10 {tid} rid={req.rid}: finished output {got} "
@@ -202,6 +213,20 @@ def check_invariants(mgr) -> None:
                       f"diverged from oracle {want[:len(got)]}")
             if req.done and not req.out:
                 _fail(f"I10 {tid} rid={req.rid}: done with no tokens")
+
+
+def check_autoscale(action, cfg) -> None:
+    """I11 — an autoscaler action must be justified by the telemetry
+    snapshot it carries (``core.autoscaler.justify_action`` re-derives
+    the action's necessary conditions from that snapshot alone). The
+    token-stream half of the invariant — the action must not perturb any
+    request's output — is I10, which the harness checks after the same
+    op."""
+    from repro.core.autoscaler import justify_action
+    err = justify_action(action, cfg)
+    if err is not None:
+        _fail(f"I11 unjustified autoscale action "
+              f"(snapshot {action.snapshot.describe()}): {err}")
 
 
 def check_timings(timings: dict) -> None:

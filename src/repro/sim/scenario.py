@@ -29,9 +29,15 @@ Op kinds (the paper's management surface + fault injection):
            I1-I8 plus recovery idempotence (I9) afterwards
   serve_submit  a burst of requests arrives at the serving tenant sv0
            (guest-side queueing: legal even while sv0 is paused)
-  serve_step    sv0's engine advances N iterations (admit + batched
-           decode over its paged KV); invariant I10 then checks every
+  serve_step    the serving engines advance N iterations (admit + batched
+           decode over paged KV); invariant I10 then checks every
            request's tokens against the no-reconfiguration oracle
+  autoscale  one elastic-control-plane epoch: the harness snapshots the
+           serving tenants' telemetry, runs the ``core.autoscaler``
+           policy loop, and executes the planned action (attach a new
+           serving tenant / detach an idle one / move queued requests
+           hot->cold + migrate) through the journaled manager ops;
+           invariant I11 then checks the action against the snapshot
 
 The generator keeps a conservative validity model (who is running/paused/
 detached, how many VFs exist) so sequences are mostly executable, and —
@@ -51,7 +57,12 @@ from typing import Optional
 
 OP_KINDS = ("init", "attach", "detach", "pause", "pause_live", "unpause",
             "reconf", "migrate", "fault", "step", "crash",
-            "serve_submit", "serve_step")
+            "serve_submit", "serve_step", "autoscale")
+
+#: arrival-pattern shapes for serve_submit bursts ("bursty" is the
+#: original mix and the default; the others model the traffic traces the
+#: elastic control plane is benchmarked on)
+ARRIVAL_PATTERNS = ("bursty", "ramp", "spike", "diurnal")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +99,15 @@ class ScenarioConfig:
     # right after init and participates in pause/pause_live/unpause/
     # migrate like any other tenant — invariant I10 checks its tokens
     serve_rate: float = 0.0
+    # elastic control plane (0 keeps pre-autoscale sequences byte-
+    # identical): at this rate — only meaningful with serve_rate > 0 —
+    # the scenario emits ``autoscale`` ops; the harness runs one policy-
+    # loop epoch per op and I11 checks every action it takes
+    autoscale_rate: float = 0.0
+    # serve_submit burst shape (see ARRIVAL_PATTERNS): "bursty" (default,
+    # the original draw), "ramp" (bursts grow across the scenario),
+    # "spike" (mostly quiet with rare large bursts), "diurnal" (sinusoid)
+    arrival: str = "bursty"
 
 
 # weights for the op mix after init (step dominates: tenants mostly work)
@@ -133,8 +153,16 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
         return len(running) + len(paused) + len(detached) + 0
 
     while len(ops) < cfg.num_ops:
+        # gated on truthiness so autoscale_rate=0 draws nothing and the
+        # pre-autoscale op stream stays byte-identical (same trick as
+        # crash_rate below)
+        if serve and cfg.autoscale_rate and \
+                rng.random() < cfg.autoscale_rate:
+            ops.append(Op("autoscale"))
+            continue
         if serve and rng.random() < cfg.serve_rate:
-            op = _serve_op(rng, running, paused)
+            op = _serve_op(rng, cfg, len(ops) / max(cfg.num_ops, 1),
+                           running, paused)
             if op is not None:
                 ops.append(op)
                 continue
@@ -210,19 +238,35 @@ def _nonserve(tenants: list) -> list:
     return sorted(t for t in tenants if not t.startswith("sv"))
 
 
-def _serve_op(rng: random.Random, running, paused) -> Optional[Op]:
-    """Serve-traffic op: bursty arrivals (the queue accepts even while the
-    engine is PAUSED — the guest keeps its device) and engine steps (only
-    legal while running)."""
+def _serve_op(rng: random.Random, cfg: ScenarioConfig, frac: float,
+              running, paused) -> Optional[Op]:
+    """Serve-traffic op: arrivals per ``cfg.arrival`` (the queue accepts
+    even while the engine is PAUSED — the guest keeps its device) and
+    engine steps (only legal while running)."""
     if "sv0" in running:
         if rng.random() < 0.55:
             return Op("serve_submit", tenant="sv0",
-                      burst=rng.choice([1, 1, 2, 3, 6]))
+                      burst=_burst(rng, cfg, frac))
         return Op("serve_step", tenant="sv0", steps=rng.randint(1, 3))
     if "sv0" in paused:
         return Op("serve_submit", tenant="sv0",
                   burst=rng.choice([1, 2]))
     return None
+
+
+def _burst(rng: random.Random, cfg: ScenarioConfig, frac: float) -> int:
+    """Burst size for one serve_submit. ``bursty`` reproduces the original
+    draw byte-for-byte; the others shape arrivals over scenario progress
+    ``frac`` (the traffic traces the autoscaler is exercised against)."""
+    if cfg.arrival == "ramp":
+        return rng.choice([1, 2]) + int(6 * frac)      # bursty-ramp
+    if cfg.arrival == "spike":
+        return 12 if rng.random() < 0.12 else rng.choice([1, 1, 2])
+    if cfg.arrival == "diurnal":
+        import math
+        base = 1 + int(4 * (0.5 - 0.5 * math.cos(2 * math.pi * frac)))
+        return base + rng.choice([0, 1])
+    return rng.choice([1, 1, 2, 3, 6])                 # bursty (default)
 
 
 def _weighted(rng: random.Random) -> str:

@@ -265,12 +265,16 @@ class SimServeTenant:
 
     # ---------------------------------------------------------- traffic
     def submit_burst(self, n: int = 1):
-        """n requests arrive (queueing is guest-side: works while paused)."""
+        """n requests arrive (queueing is guest-side: works while paused).
+        Each request records the seed its prompt/oracle derive from, so a
+        rebalance may hand it to ANOTHER serving tenant and I10 still
+        replays it against the right oracle."""
         for _ in range(n):
             rid = self._next_rid
             self._next_rid += 1
             req = types.SimpleNamespace(
-                rid=rid, prompt=self.make_prompt(self.seed, rid),
+                rid=rid, seed=self.seed,
+                prompt=self.make_prompt(self.seed, rid),
                 max_new=self.make_max_new(self.seed, rid),
                 out=[], done=False)
             self.queue.append(req)
