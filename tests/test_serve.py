@@ -434,7 +434,14 @@ def test_pause_mid_chunked_prefill_requeues_jobs_token_identical(setup):
     assert serve(False) == serve(True)
 
 
-def test_fleet_slo_admission_rejects_typed(setup):
+def test_fleet_slo_rejection_then_retry_completes(setup):
+    """Regression: submit used to set ``req.done = True`` and
+    ``req.error`` on the SLO-rejection path BEFORE raising, so a caller
+    retrying the same Request after backoff submitted an object every
+    engine treated as already finished (its loop dropped it on the first
+    step, done-with-stale-error). Rejection must be side-effect-free on
+    the request — tracked fleet-side only — and the retry must serve
+    normally."""
     run, model, params = setup
     fleet = ServeFleet(run, params, num_engines=1, num_devices=2, slots=1,
                        max_len=48, slo_max_load=1,
@@ -443,9 +450,32 @@ def test_fleet_slo_admission_rejects_typed(setup):
     over = Request(rid=1, prompt=np.arange(4), max_new_tokens=2)
     with pytest.raises(RequestRejected):
         fleet.submit(over)
-    assert over.done and over.error and "SLO" in over.error
+    # the request object is UNTOUCHED: the caller owns retry policy
+    assert over.done is False and over.error is None and over.out == []
+    # the rejection is visible fleet-side instead
+    assert len(fleet.rejections) == 1
+    assert fleet.rejections[0]["rid"] == 1
+    assert fleet.telemetry.rejected["serve0"] == 1
     done = fleet.drain()
-    assert sorted(r.rid for r in done) == [0, 1]  # rejection surfaced
+    assert sorted(r.rid for r in done) == [0]     # only real completions
+    fleet.submit(over)                            # retry after backoff
+    done2 = fleet.drain()
+    assert [r.rid for r in done2] == [1]
+    assert over.done and over.error is None and len(over.out) == 2
+
+
+def test_fleet_tie_break_is_creation_order_not_lexicographic(setup):
+    """Regression: load ties broke on the tid STRING, so a >= 10 engine
+    fleet placed round-robin as serve0, serve1, serve10, serve11,
+    serve2, ... — placement must follow engine creation index (this
+    matters once the autoscaler spawns tenants dynamically)."""
+    run, model, params = setup
+    fleet = ServeFleet(run, params, num_engines=12, num_devices=12,
+                       slots=1, max_len=48, workdir=tempfile.mkdtemp())
+    placements = [fleet.submit(Request(rid=i, prompt=np.arange(4) % 50,
+                                       max_new_tokens=1))
+                  for i in range(12)]
+    assert placements == [f"serve{i}" for i in range(12)]
 
 
 def test_fleet_placement_follows_policy_heterogeneous_pool(setup):
