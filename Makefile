@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast chaos chaos-fast bench bench-pause bench-sweep \
-	bench-chaos bench-serve bench-elastic
+	bench-chaos bench-serve bench-elastic bench-prefix
 
 test:            ## full tier-1 suite
 	$(PYTHON) -m pytest -x -q
@@ -16,7 +16,8 @@ chaos:           ## full crash matrix via pytest (what CI runs on main)
 chaos-fast:      ## PR-gate crash matrix subset
 	$(PYTHON) -m pytest -x -q -m chaos
 
-bench: bench-pause bench-sweep bench-chaos bench-serve bench-elastic  ## regenerate BENCH_*.json
+bench: bench-pause bench-sweep bench-chaos bench-serve bench-elastic \
+	bench-prefix  ## regenerate BENCH_*.json
 
 bench-pause:
 	$(PYTHON) benchmarks/pause_path.py --repeats 3 --out BENCH_pause_path.json
@@ -35,3 +36,6 @@ bench-serve:     ## serve-plane hot path (paged vs dense, live-pause p95)
 
 bench-elastic:   ## static vs autoscaled fleet on ramp/spike/diurnal traces
 	$(PYTHON) benchmarks/elastic_sweep.py --out BENCH_elastic.json
+
+bench-prefix:    ## shared-prefix capacity ratio (CoW sharing vs copy-on-admit)
+	$(PYTHON) benchmarks/prefix_share.py --out BENCH_prefix_share.json

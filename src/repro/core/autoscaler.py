@@ -56,6 +56,12 @@ class EngineStats:
     ttft_p95_ms: float = 0.0
     itl_p95_ms: float = 0.0
     rejected: int = 0           # fleet-side rejections attributed here
+    # paged-KV cache pressure (zeros when the engine is dense): the pool
+    # can thrash while queues stay short, so queue depth alone is blind
+    cache_exhausted: int = 0    # cumulative CacheExhausted events
+    defrag_events: int = 0      # cumulative production defragment() passes
+    pages_in_use: int = 0       # allocator pages currently owned
+    pages_free: int = 0         # allocator pages currently free
 
 
 @dataclasses.dataclass(frozen=True)

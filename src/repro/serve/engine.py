@@ -43,8 +43,8 @@ from repro.configs.base import RunConfig
 from repro.models.model import Model, build_model
 from repro.serve.paged import (BlockAllocator, CacheExhausted,
                                RequestRejected, admit_kv, apply_page_moves,
-                               init_paged_cache, paged_cache_supported,
-                               reset_slot_state)
+                               copy_page, init_paged_cache,
+                               paged_cache_supported, reset_slot_state)
 
 
 @dataclasses.dataclass
@@ -92,7 +92,7 @@ class ServeEngine:
     def __init__(self, run: RunConfig, params, *, slots: int = 4,
                  max_len: int = 256, rules=None, paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, share_prefix: bool = False):
         self.run = run
         self.model = build_model(run)
         self.params = params
@@ -105,6 +105,10 @@ class ServeEngine:
         self.paused = False
         self._finished: list[Request] = []              # completed requests
         self._jobs: dict[int, _PrefillJob] = {}         # slot -> prefill job
+        #: cache-pressure / sharing counters, pumped into the MetricsBus
+        #: by ServeFleet so the autoscaler sees cache pressure, not just
+        #: queue depth. Cumulative over the engine's lifetime.
+        self.stats = collections.Counter()
         # per-step dirty set: which export_state keys changed since the
         # last export. Informational for drivers (and asserted in tests);
         # the byte-level skipping itself happens in StagingEngine's
@@ -125,6 +129,11 @@ class ServeEngine:
             self.alloc = BlockAllocator(self.num_pages, page_size)
             self.tables = np.zeros((slots, maxp), np.int32)
             self._dirty.add("tables")
+        # prefix sharing keys on prompt tokens alone, so it is gated to
+        # token-only frontends (vision patch rows precede the token rows
+        # and differ per request)
+        self.share_prefix = (paged and share_prefix
+                             and cfg.frontend.kind == "none")
         # chunked prefill needs per-chunk attention continuation, which only
         # the attention-pattern stacks support (recurrent blocks would need
         # their chunk-boundary state threaded through)
@@ -199,6 +208,25 @@ class ServeEngine:
         req.error = str(err)
         self._finished.append(req)
 
+    def _paged_admit(self, req: Request, npatch: int, need: int) -> list:
+        """Reserve pages for admission: only the PROMPT rows up front —
+        decode pages grow lazily (``extend`` in ``_ensure_writable``), so
+        reserved-but-never-written pages stop inflating pool pressure.
+        The full need is still validated against pool capacity here: a
+        request that could never complete must be rejected at admission,
+        not discovered mid-decode as an endless preempt/replay cycle."""
+        if self.alloc.pages_needed(need) > self.alloc.capacity:
+            raise RequestRejected(
+                f"request {req.rid} needs {self.alloc.pages_needed(need)} "
+                f"pages; pool capacity is {self.alloc.capacity} "
+                f"(page_size={self.page_size})")
+        tokens = None
+        if self.share_prefix and npatch == 0:
+            tokens = tuple(int(t) for t in req.prompt)
+        return self.alloc.allocate(
+            req.rid, self.alloc.pages_needed(npatch + len(req.prompt)),
+            tokens=tokens)
+
     def _admit(self):
         """Fill free slots from the queue. A request that is rejected or
         finishes at prefill does NOT consume the slot — it is re-offered
@@ -216,15 +244,24 @@ class ServeEngine:
                 pages = None
                 if self.paged:
                     try:
-                        pages = self.alloc.allocate(
-                            req.rid, self.alloc.pages_needed(need))
+                        pages = self._paged_admit(req, npatch, need)
                     except RequestRejected as e:
                         self._reject(req, e)
                         continue
                     except CacheExhausted:
-                        # transient: back off, keep arrival order
-                        self.queue.appendleft(req)
-                        return
+                        # transient. One defragment pass before backing
+                        # off: compaction keeps block tables dense and
+                        # the counters give the autoscaler a cache-
+                        # pressure signal distinct from queue depth
+                        self.stats["cache_exhausted"] += 1
+                        self.defragment()
+                        self.stats["defrag_events"] += 1
+                        try:
+                            pages = self._paged_admit(req, npatch, need)
+                        except CacheExhausted:
+                            # back off, keep arrival order
+                            self.queue.appendleft(req)
+                            return
                 self._ensure_cache()
                 if self.prefill_chunk and len(req.prompt) > \
                         self.prefill_chunk:
@@ -307,14 +344,23 @@ class ServeEngine:
     def _place(self, slot: int, req: Request, req_cache, logical_len: int,
                pages):
         """Copy-on-admit: move a prefilled request's cache into the batch
-        (paged: into its allocated pages; dense: into its slot ring)."""
+        (paged: into its allocated pages, skipping the trie-shared chain
+        head; dense: into its slot ring)."""
         if self.paged:
+            shared = self.alloc.shared_count(req.rid)
+            self.stats["shared_page_hits"] += shared
             self._cache = admit_kv(self._cache, req_cache, pages,
-                                   self.page_size, slot)
+                                   self.page_size, slot,
+                                   skip_pages=shared)
             row = self.tables[slot]
             row[:] = 0
             row[:len(pages)] = pages
             self._dirty.add("tables")
+            # offer this prompt's pages for sharing only now that their
+            # bytes are written (registration at allocate time would let
+            # a sibling map onto a still-unwritten chunked prefill)
+            if self.share_prefix:
+                self.alloc.register_prefix(req.rid)
         else:
             self._insert(slot, req_cache)
         self.active[slot] = req
@@ -370,6 +416,15 @@ class ServeEngine:
         if not act:
             return 0
         self._ensure_cache()
+        if self.paged:
+            # the decode kernel writes each slot's new KV row through its
+            # block table, so every write target must be private and
+            # allocated BEFORE the batched call: lazily grow the chain
+            # (prompt pages were all admission reserved) and CoW-split
+            # shared pages; a slot the pool cannot serve is preempted
+            act = [s for s in act if self._ensure_writable(s)]
+            if not act:
+                return 0
         act_mask = np.zeros((self.slots,), bool)
         act_mask[act] = True
         pos_new = np.where(act_mask, self.pos + 1, -1).astype(np.int32)
@@ -398,6 +453,51 @@ class ServeEngine:
                 self.active[s] = None
                 self._reset_slot(s, rid=req.rid)
         return len(act)
+
+    def _ensure_writable(self, slot: int) -> bool:
+        """Make this step's KV write target (position ``pos+1``) safe for
+        the decoding slot: extend the chain when the write crosses into
+        an unallocated page (lazy growth), CoW-split when it lands in a
+        page with refcount > 1. Exhaustion preempts the slot (False)."""
+        req = self.active[slot]
+        pi = (int(self.pos[slot]) + 1) // self.page_size
+        chain = self.alloc.pages_of(req.rid)
+        try:
+            if pi >= len(chain):
+                (new,) = self.alloc.extend(req.rid, 1)
+                self.tables[slot, pi] = new
+                self.stats["lazy_extends"] += 1
+                self._dirty.add("tables")
+            elif self.alloc.refcount(chain[pi]) > 1:
+                old, new = self.alloc.cow(req.rid, pi)
+                self._cache = copy_page(self._cache, old, new)
+                self.tables[slot, pi] = new
+                self.stats["cow_splits"] += 1
+                self._dirty |= {"cache", "tables"}
+        except CacheExhausted:
+            self.stats["cache_exhausted"] += 1
+            self._preempt(slot)
+            return False
+        return True
+
+    def _preempt(self, slot: int):
+        """Preemption-by-recompute, the exhaustion safety valve: drop the
+        slot's work, release its pages (guaranteeing pool progress for
+        the surviving slots), and requeue the request from scratch at the
+        FRONT of the queue. Prefill and sampling are deterministic pure
+        functions of the request (counter-seeded RNG — I10), so the
+        replay emits exactly the tokens the preempted attempt did."""
+        req = self.active[slot]
+        self.alloc.free(req.rid)
+        req.out.clear()
+        req.t_tok.clear()
+        self.active[slot] = None
+        self.tables[slot, :] = 0
+        self.pos[slot] = -1
+        self._cache = reset_slot_state(self._cache, slot)
+        self.queue.appendleft(req)
+        self.stats["preemptions"] += 1
+        self._dirty |= {"cache", "pos", "tables"}
 
     def _reset_slot(self, slot: int, rid: Optional[int] = None):
         """Recycle a finished slot: paged KV pages go back to the

@@ -176,7 +176,8 @@ class ServeFleet:
                  num_devices: int = 8, policy: str = "first_fit",
                  slots: int = 4, max_len: int = 256, paged: bool = True,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefill_chunk: int = 0, slo_max_load: int = 64,
+                 prefill_chunk: int = 0, share_prefix: bool = False,
+                 slo_max_load: int = 64,
                  workdir: str = "/tmp/svff_fleet", devices=None,
                  autoscale: Optional[AutoscaleConfig] = None,
                  spare_engines: int = 0, num_vfs: Optional[int] = None):
@@ -196,7 +197,8 @@ class ServeFleet:
         self._params_src = params
         self._engine_kw = dict(slots=slots, max_len=max_len, paged=paged,
                                page_size=page_size, num_pages=num_pages,
-                               prefill_chunk=prefill_chunk)
+                               prefill_chunk=prefill_chunk,
+                               share_prefix=share_prefix)
         # pre-carving MORE VFs than engines (``num_vfs``) gives scale-out
         # a pause-free path: attaching to an existing detached VF never
         # interrupts the running engines, whereas growing the partition
@@ -277,6 +279,9 @@ class ServeFleet:
                 active += tn.run_steps(1)["active"]
                 self.telemetry.record_load(tn.tid, tn.load,
                                            len(tn.engine.queue))
+                self.telemetry.record_cache_pressure(
+                    tn.tid, tn.engine.stats["cache_exhausted"],
+                    tn.engine.stats["defrag_events"])
                 # harvest only the suffix of _finished not yet scanned —
                 # the list is cleared by drain, and rescanning it whole
                 # would make the hot path O(completed history)
@@ -346,6 +351,7 @@ class ServeFleet:
         stats = []
         for tid, tn in self.tenants.items():
             eng = tn.engine
+            paged = getattr(eng, "paged", False)
             stats.append(EngineStats(
                 tid=tid, index=self._order[tid], status=tn.status,
                 load=tn.load, queue_depth=len(eng.queue),
@@ -353,7 +359,11 @@ class ServeFleet:
                 prefill_jobs=len(eng._jobs),
                 ttft_p95_ms=self.telemetry.ttft_ms(tid),
                 itl_p95_ms=self.telemetry.itl_ms(tid),
-                rejected=self.telemetry.rejected[tid]))
+                rejected=self.telemetry.rejected[tid],
+                cache_exhausted=eng.stats["cache_exhausted"],
+                defrag_events=eng.stats["defrag_events"],
+                pages_in_use=eng.alloc.pages_in_use if paged else 0,
+                pages_free=eng.alloc.num_free if paged else 0))
         return TelemetrySnapshot(
             epoch=self._epoch, slo_max_load=self.slo_max_load,
             engines=tuple(stats), free_vfs=len(self._free_vfs()),

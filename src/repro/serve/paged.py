@@ -8,8 +8,8 @@ units, an owner table, allocate/free/defragment), applied to KV rows
 instead of accelerator devices:
 
   BlockAllocator     the PF analogue: owns the page pool, tracks per-request
-                     ownership, enforces isolation (a page has at most one
-                     owner), compacts on ``defragment``
+                     ownership and per-page refcounts, compacts on
+                     ``defragment``
   page 0             reserved garbage page — never allocated; inactive batch
                      slots' masked writes are redirected there, which is how
                      an idle slot's pages stay bit-untouched
@@ -17,6 +17,21 @@ instead of accelerator devices:
                      cache (B=1) and its KV is *copied* into its allocated
                      pages on admission (``admit_kv``), so admission never
                      aliases the running batch's storage
+  prefix sharing     requests whose token prefixes match map their block
+                     tables onto the SAME physical pages (a prefix trie
+                     keyed by token-prefix chains; see below), multiplying
+                     effective pool capacity for shared system prompts
+  copy-on-write      a decode write landing in a page with refcount > 1
+                     splits exactly that page (``cow`` + ``copy_page``):
+                     the writer gets a private copy and repoints only its
+                     own table row; every other sharer is untouched
+
+Sharing is read-free because ``kernels/paged_decode`` masks reads with
+``kpos <= pos``: rows a sharer has not logically reached (another
+request's longer prompt tail, or its decode tokens parked in a shared
+partial page) are never read, so a page may be shared as long as the rows
+BELOW each sharer's position are bit-identical — which the token-prefix
+keys guarantee.
 
 The attention-side consumer is ``kernels/paged_decode`` (block-table
 indirection, cost proportional to pages actually written).
@@ -45,6 +60,12 @@ class CacheExhausted(RuntimeError):
     Admission backs off (the request stays queued) rather than failing."""
 
 
+class DoubleFreeError(RuntimeError):
+    """``free`` of a rid that holds no pages. With refcounted sharing a
+    silent double-decref would corrupt pages still referenced by sibling
+    requests, so this is a loud typed error, never a no-op."""
+
+
 def _is_kv(path) -> bool:
     """Attention-cache leaves that need no slot reset (self-attn KV is
     masked by pos; cross xk/xv only ever appear in DENSE caches — the
@@ -54,12 +75,35 @@ def _is_kv(path) -> bool:
 
 
 class BlockAllocator:
-    """Fixed-size page pool with per-request ownership.
+    """Fixed-size page pool with per-request ownership, per-page
+    refcounts, and a prefix trie for copy-on-write page sharing.
 
     Page ids run [0, num_pages); page 0 is reserved (garbage page), so the
     allocatable capacity is ``num_pages - 1``. Free pages are handed out
     lowest-id first, which keeps block tables deterministic (the serving
-    analogue of the scheduler's 'ties break in PF table order')."""
+    analogue of the scheduler's 'ties break in PF table order').
+
+    Sharing model. A page's KV rows are a function of the ENTIRE token
+    prefix up to and including the page's own tokens, so the trie keys
+    are token-prefix tuples, not per-page token windows:
+
+      full pages     ``tokens[: page_size * (i+1)]`` -> page of chain
+                     index i (registered once, first placement wins)
+      partial page   a prompt's last, partly-filled page, keyed under its
+                     full-page prefix by the leftover token tuple. A later
+                     request may share it only when its own leftover
+                     tokens are an exact PREFIX of the registered entry's
+                     — its rows are then already present at the right
+                     offsets, and any longer registered tail (or the
+                     registrant's decode rows parked above it) sits past
+                     the sharer's position, masked by the decode kernel
+
+    Registration happens at PLACE time (``register_prefix``), after the
+    page bytes are actually written — pages reserved by an in-flight
+    chunked prefill are never offered for sharing. Trie entries live
+    exactly as long as the page has owners: the last ``free`` decref
+    unregisters. Every owner of a page counts one refcount; a decode
+    write into a page with refcount > 1 must go through ``cow`` first."""
 
     def __init__(self, num_pages: int, page_size: int):
         if num_pages < 2:
@@ -67,7 +111,16 @@ class BlockAllocator:
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
         self._free = list(range(1, num_pages))     # ascending
-        self._owned: dict[int, list[int]] = {}     # rid -> page ids
+        self._owned: dict[int, list[int]] = {}     # rid -> page chain
+        self._ref: dict[int, int] = {}             # page -> owner count
+        self._shared: dict[int, int] = {}          # rid -> shared chain head
+        self._tokens: dict[int, tuple] = {}        # rid -> prompt tokens
+        # the trie: full-prefix keys -> page; partial entries grouped
+        # under their full-page prefix; _site is the reverse map (one
+        # registration per page) used by unregistration and defragment
+        self._full: dict[tuple, int] = {}
+        self._partial: dict[tuple, list] = {}      # key -> [(rest, page)]
+        self._site: dict[int, tuple] = {}
 
     # -- capacity ------------------------------------------------------------
     @property
@@ -78,26 +131,111 @@ class BlockAllocator:
     def capacity(self) -> int:
         return self.num_pages - 1
 
+    @property
+    def pages_in_use(self) -> int:
+        """Unique physical pages currently owned (the sharing win shows
+        up here: N requests on one system prompt count its pages once)."""
+        return self.capacity - len(self._free)
+
     def pages_needed(self, tokens: int) -> int:
         return max(1, math.ceil(tokens / self.page_size))
 
+    # -- the prefix trie -----------------------------------------------------
+    def _lookup(self, tokens: tuple, n: int) -> list[int]:
+        """Longest registered chain prefix for ``tokens``, at most ``n``
+        pages: consecutive full-page hits from the root, then (only when
+        every full page hit) at most one partial-page hit."""
+        P = self.page_size
+        shared: list[int] = []
+        nfull = len(tokens) // P
+        for i in range(min(nfull, n)):
+            page = self._full.get(tokens[:P * (i + 1)])
+            if page is None:
+                return shared
+            shared.append(page)
+        rest = tokens[P * nfull:]
+        if rest and len(shared) == nfull < n:
+            for reg_rest, page in self._partial.get(tokens[:P * nfull], ()):
+                if rest == reg_rest[:len(rest)]:
+                    shared.append(page)
+                    break
+        return shared
+
+    def register_prefix(self, rid: int) -> int:
+        """Offer rid's PROMPT pages (the tokens recorded at allocate) for
+        sharing. Idempotent and conflict-safe: a page registers at most
+        once, a key keeps its first page. Returns entries added."""
+        tokens = self._tokens.get(rid)
+        chain = self._owned.get(rid)
+        if not tokens or not chain:
+            return 0
+        P = self.page_size
+        added = 0
+        nfull = len(tokens) // P
+        for i in range(min(nfull, len(chain))):
+            key = tokens[:P * (i + 1)]
+            page = chain[i]
+            if key not in self._full and page not in self._site:
+                self._full[key] = page
+                self._site[page] = ("full", key)
+                added += 1
+        rest = tokens[P * nfull:]
+        if rest and nfull < len(chain):
+            page = chain[nfull]
+            key = tokens[:P * nfull]
+            node = self._partial.setdefault(key, [])
+            if page not in self._site and rest not in [r for r, _ in node]:
+                node.append((rest, page))
+                self._site[page] = ("partial", key, rest)
+                added += 1
+        return added
+
+    def _unregister(self, page: int):
+        site = self._site.pop(page, None)
+        if site is None:
+            return
+        if site[0] == "full":
+            del self._full[site[1]]
+        else:
+            node = self._partial[site[1]]
+            node.remove((site[2], page))
+            if not node:
+                del self._partial[site[1]]
+
     # -- allocate / free -----------------------------------------------------
-    def allocate(self, rid: int, n: int) -> list[int]:
+    def allocate(self, rid: int, n: int,
+                 tokens: Optional[tuple] = None) -> list[int]:
+        """Hand ``rid`` a chain of ``n`` pages. With ``tokens`` (the
+        prompt the pages will hold), the chain head reuses registered
+        shared pages — only the remainder consumes free pages. The
+        exhaustion check runs BEFORE any refcount moves, so a failed
+        allocation is side-effect-free."""
         if rid in self._owned:
             raise ValueError(f"request {rid} already holds pages")
         if n > self.capacity:
             raise RequestRejected(
                 f"request {rid} needs {n} pages; pool capacity is "
                 f"{self.capacity} (page_size={self.page_size})")
-        if n > len(self._free):
+        shared = self._lookup(tuple(tokens), n) if tokens else []
+        fresh = n - len(shared)
+        if fresh > len(self._free):
             raise CacheExhausted(
-                f"request {rid} needs {n} pages, only {len(self._free)} "
-                "free")
-        got, self._free = self._free[:n], self._free[n:]
-        self._owned[rid] = got
-        return list(got)
+                f"request {rid} needs {fresh} fresh pages "
+                f"({len(shared)} shared), only {len(self._free)} free")
+        got, self._free = self._free[:fresh], self._free[fresh:]
+        for p in shared:
+            self._ref[p] += 1
+        for p in got:
+            self._ref[p] = 1
+        self._owned[rid] = shared + got
+        self._shared[rid] = len(shared)
+        if tokens is not None:
+            self._tokens[rid] = tuple(tokens)
+        return list(self._owned[rid])
 
     def extend(self, rid: int, n: int = 1) -> list[int]:
+        """Lazy decode growth: append ``n`` fresh (private) pages to
+        rid's chain. Decode-grown pages are never offered for sharing."""
         if rid not in self._owned:
             raise ValueError(f"request {rid} holds no pages")
         if n > len(self._free):
@@ -105,13 +243,60 @@ class BlockAllocator:
                 f"request {rid} needs {n} more pages, only "
                 f"{len(self._free)} free")
         got, self._free = self._free[:n], self._free[n:]
+        for p in got:
+            self._ref[p] = 1
         self._owned[rid].extend(got)
         return list(got)
 
+    def shared_count(self, rid: int) -> int:
+        """Pages at the head of rid's chain that came from the trie at
+        allocate time (the copy-on-admit scatter skips exactly these)."""
+        return self._shared.get(rid, 0)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def cow(self, rid: int, idx: int) -> tuple[int, int]:
+        """Copy-on-write split: replace the shared page at chain index
+        ``idx`` with a fresh private one (caller device-copies the bytes
+        via ``copy_page`` and repoints its own table row). Returns
+        ``(old_page, new_page)``."""
+        chain = self._owned[rid]
+        old = chain[idx]
+        if self._ref[old] <= 1:
+            raise ValueError(
+                f"cow of unshared page {old} (rid {rid}, idx {idx})")
+        if not self._free:
+            raise CacheExhausted(
+                f"request {rid} needs 1 page for a CoW split, none free")
+        new = self._free.pop(0)
+        self._ref[new] = 1
+        chain[idx] = new
+        self._ref[old] -= 1           # > 0 by the guard above
+        return old, new
+
+    def _decref(self, page: int):
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            del self._ref[page]
+            self._unregister(page)
+            self._free.append(page)
+            self._free.sort()
+
     def free(self, rid: int) -> list[int]:
-        pages = self._owned.pop(rid, [])
-        self._free.extend(pages)
-        self._free.sort()
+        """Release rid's references. Pages drop to the free list only
+        when their LAST owner lets go (a finished request's shared
+        system-prompt pages stay live for its siblings). Unknown rid is a
+        ``DoubleFreeError`` — see the class docstring."""
+        pages = self._owned.pop(rid, None)
+        if pages is None:
+            raise DoubleFreeError(
+                f"free of request {rid}, which holds no pages "
+                "(double free, or never allocated)")
+        self._shared.pop(rid, None)
+        self._tokens.pop(rid, None)
+        for p in pages:
+            self._decref(p)
         return pages
 
     def pages_of(self, rid: int) -> list[int]:
@@ -121,33 +306,65 @@ class BlockAllocator:
         return {rid: list(p) for rid, p in self._owned.items()}
 
     def check_invariants(self):
-        """Mirror of DevicePool._check_invariants: disjoint ownership,
-        everything in-pool, free+owned is an exact partition."""
-        seen: dict[int, int] = {}
+        """Mirror of DevicePool._check_invariants, refcount-aware: every
+        page's refcount equals its live chain references, free+owned is
+        an exact partition, and the trie/site maps agree and only name
+        live pages."""
+        refs: dict[int, int] = {}
         for rid, pages in self._owned.items():
+            seen = set()
             for p in pages:
                 assert 1 <= p < self.num_pages, (rid, p)
                 assert p not in seen, (
-                    f"page {p} owned by both {seen[p]} and {rid}")
-                seen[p] = rid
-        assert not (set(self._free) & set(seen))
-        assert len(self._free) + len(seen) == self.capacity
+                    f"page {p} twice in request {rid}'s chain")
+                seen.add(p)
+                refs[p] = refs.get(p, 0) + 1
+        assert set(refs) == set(self._ref), (
+            f"refcount key drift: owned {sorted(refs)} != "
+            f"counted {sorted(self._ref)}")
+        for p, want in refs.items():
+            assert self._ref[p] == want, (
+                f"refcount drift: page {p} counted {self._ref[p]}, "
+                f"{want} live chain references")
+        assert not (set(self._free) & set(refs))
+        assert len(self._free) + len(refs) == self.capacity
+        for rid, nsh in self._shared.items():
+            assert 0 <= nsh <= len(self._owned.get(rid, ())), (rid, nsh)
+        for page, site in self._site.items():
+            assert page in refs, f"trie entry for freed page {page}"
+            if site[0] == "full":
+                assert self._full.get(site[1]) == page, site
+            else:
+                assert (site[2], page) in self._partial.get(site[1], ()), \
+                    site
+        for key, page in self._full.items():
+            assert self._site.get(page) == ("full", key)
+        for key, node in self._partial.items():
+            for rest, page in node:
+                assert self._site.get(page) == ("partial", key, rest)
 
     # -- defragment ----------------------------------------------------------
     def defragment(self) -> dict[int, int]:
-        """Compact owned pages to the lowest ids (request order, then page
-        order — deterministic). Returns the {old_id: new_id} moves; the
-        caller must apply the same mapping to the physical page arrays and
-        any block tables (``apply_page_moves``)."""
-        moves: dict[int, int] = {}
+        """Compact owned pages to the lowest ids (request order, then
+        chain order, each UNIQUE page re-id'd once — a shared page moves
+        once and every sharer's chain follows). Returns the {old: new}
+        moves; the caller must apply the same mapping to the physical
+        page arrays and any block tables (``apply_page_moves``)."""
+        newid: dict[int, int] = {}
         nxt = 1
         for rid in sorted(self._owned):
-            pages = self._owned[rid]
-            for i, p in enumerate(pages):
-                if p != nxt:
-                    moves[p] = nxt
-                pages[i] = nxt
-                nxt += 1
+            for p in self._owned[rid]:
+                if p not in newid:
+                    newid[p] = nxt
+                    nxt += 1
+        moves = {old: new for old, new in newid.items() if old != new}
+        self._owned = {rid: [newid[p] for p in pages]
+                       for rid, pages in self._owned.items()}
+        self._ref = {newid[p]: c for p, c in self._ref.items()}
+        self._full = {k: newid[p] for k, p in self._full.items()}
+        self._partial = {k: [(r, newid[p]) for r, p in node]
+                         for k, node in self._partial.items()}
+        self._site = {newid[p]: s for p, s in self._site.items()}
         self._free = list(range(nxt, self.num_pages))
         self.check_invariants()
         return moves
@@ -194,24 +411,42 @@ def init_paged_cache(model, shape, num_pages: int, page_size: int) -> dict:
 
 
 def admit_kv(cache: dict, req_cache: dict, page_ids, page_size: int,
-             slot: int) -> dict:
+             slot: int, skip_pages: int = 0) -> dict:
     """Copy-on-admit: scatter a prefilled request's (nper, 1, L, K, hd)
     KV into its allocated pages; non-KV leaves (recurrent state) are
-    written into batch ``slot`` densely."""
-    ids = jnp.asarray(page_ids, jnp.int32)
+    written into batch ``slot`` densely. ``skip_pages`` leading pages of
+    the chain are trie-shared and already hold the right rows — writing
+    them here would zero-pad over a sibling's live rows, so they are
+    excluded from the scatter."""
+    skip = int(skip_pages)
+    ids = jnp.asarray(page_ids, jnp.int32)[skip:]
     n = int(ids.shape[0])
 
     def one(path, pooled, req_leaf):
         if _is_kv(path):
+            if n == 0:                 # whole prompt shared: nothing to copy
+                return pooled
             nper, _, L, K, hd = req_leaf.shape
-            pad = n * page_size - L
-            r = jnp.pad(req_leaf[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            r = req_leaf[:, 0, skip * page_size:]
+            pad = n * page_size - (L - skip * page_size)
+            r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
             r = r.reshape(nper, n, page_size, K, hd)
             return pooled.at[:, ids].set(r.astype(pooled.dtype))
         return jax.lax.dynamic_update_slice(
             pooled, req_leaf.astype(pooled.dtype),
             (0, slot) + (0,) * (pooled.ndim - 2))
     return jax.tree_util.tree_map_with_path(one, cache, req_cache)
+
+
+def copy_page(cache: dict, src: int, dst: int) -> dict:
+    """CoW page split, device side: duplicate one physical page across
+    every KV pool so the writer's fresh private page starts bit-identical
+    to the shared one it is leaving."""
+    def one(path, leaf):
+        if _is_kv(path):
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf
+    return jax.tree_util.tree_map_with_path(one, cache)
 
 
 def apply_page_moves(cache: dict, moves: dict[int, int]) -> dict:

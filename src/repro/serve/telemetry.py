@@ -36,6 +36,10 @@ class MetricsBus:
         self.submitted = collections.Counter()
         self.completed = collections.Counter()
         self.rejected = collections.Counter()
+        # cache-pressure counters (absolute cumulative values mirrored
+        # from each engine's stats, not deltas — record overwrites)
+        self.cache_exhausted = collections.Counter()
+        self.defrag_events = collections.Counter()
         self._rejected_since_snapshot = 0
         # requests already harvested, keyed (rid, t_submit); pruned when
         # the owner engine's finished list is drained
@@ -51,6 +55,14 @@ class MetricsBus:
 
     def record_load(self, tid: str, load: int, queued: int) -> None:
         self._load[tid].append((load, queued))
+
+    def record_cache_pressure(self, tid: str, exhausted: int,
+                              defrags: int) -> None:
+        """Mirror an engine's cumulative exhaustion/defrag counters so the
+        autoscaler sees CACHE pressure, not just queue depth: a fleet can
+        have short queues yet be thrashing its paged pool."""
+        self.cache_exhausted[tid] = exhausted
+        self.defrag_events[tid] = defrags
 
     def harvest(self, tid: str, finished: Iterable) -> None:
         """Pull TTFT/ITL samples from finished requests' token walls.
@@ -89,9 +101,12 @@ class MetricsBus:
         return {tid: {"submitted": self.submitted[tid],
                       "completed": self.completed[tid],
                       "rejected": self.rejected[tid],
+                      "cache_exhausted": self.cache_exhausted[tid],
+                      "defrag_events": self.defrag_events[tid],
                       "load_p95": self.load_p95(tid),
                       "ttft_p95_ms": round(self.ttft_ms(tid), 3),
                       "itl_p95_ms": round(self.itl_ms(tid), 3)}
                 for tid in sorted(set(self.submitted)
                                   | set(self.completed)
-                                  | set(self.rejected))}
+                                  | set(self.rejected)
+                                  | set(self.cache_exhausted))}

@@ -45,6 +45,15 @@
       queued work to move. Paired with I10 (checked after the same op),
       this is the claim that the control plane never reconfigures without
       telemetry evidence and never perturbs a token stream doing so
+  I12 page-refcount accounting: for every tenant holding a
+      ``BlockAllocator``, refcounts recomputed from the per-rid page
+      chains equal the allocator's live refcount map (its own
+      ``check_invariants`` — free/owned partition, trie registration
+      agreement), AND every active slot's block-table row spells out
+      exactly its request's allocator chain. An over-decref (double
+      free) frees a page a prefix-sharing sibling still reads through;
+      a CoW that repoints the chain but not the table row (or vice
+      versa) makes reads and ownership disagree — both surface here
 
 Violations raise ``InvariantViolation`` tagged by the caller with the
 scenario seed and op index, which is all that is needed to reproduce.
@@ -213,6 +222,33 @@ def check_invariants(mgr) -> None:
                       f"diverged from oracle {want[:len(got)]}")
             if req.done and not req.out:
                 _fail(f"I10 {tid} rid={req.rid}: done with no tokens")
+
+    # -- I12: page refcounts == live block-table references --------------------
+    for tid, tn in mgr.tenants.items():
+        host = tn if hasattr(tn, "alloc") else getattr(tn, "engine", None)
+        alloc = getattr(host, "alloc", None)
+        if alloc is None:
+            continue
+        # the allocator's own books first: refcounts recomputed from the
+        # per-rid chains must equal the live _ref map (an over-decref
+        # frees a page a sibling still reads through)
+        try:
+            alloc.check_invariants()
+        except AssertionError as e:
+            _fail(f"I12 {tid}: allocator accounting: {e}")
+        # then the device view: every active slot's table row must spell
+        # out exactly its request's allocator chain (a CoW that repointed
+        # the chain but not the table — or vice versa — diverges here)
+        tables = getattr(host, "tables", None)
+        if tables is not None:
+            for s, req in enumerate(getattr(host, "active", ())):
+                if req is None:
+                    continue
+                chain = alloc.pages_of(req.rid)
+                row = [int(x) for x in tables[s][:len(chain)]]
+                if row != chain:
+                    _fail(f"I12 {tid} slot {s}: table row {row} != "
+                          f"allocator chain {chain} for rid {req.rid}")
 
 
 def check_autoscale(action, cfg) -> None:

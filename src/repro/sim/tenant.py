@@ -230,6 +230,9 @@ class SimServeTenant:
         self.active: list = [None] * self.SLOTS
         self.requests: list = []          # every request ever submitted
         self._next_rid = 0
+        self.shared_hits = 0              # pages admitted without a copy
+        self.cow_splits = 0               # decode writes that split a page
+        self.preemptions = 0              # CoW exhaustion -> recompute
 
     # ----------------------------------------------------- the toy "model"
     @classmethod
@@ -242,9 +245,22 @@ class SimServeTenant:
 
     @classmethod
     def make_prompt(cls, seed: int, rid: int) -> tuple:
-        plen = 1 + (rid * 7 + seed) % 5
-        return tuple((seed * 31 + rid * 17 + j * 13) % cls.VOCAB
-                     for j in range(plen))
+        """Odd rids draw unique prompts; even rids open with a PAGE+1-token
+        seed-only "system prefix" (rid % 4 == 0 requests are the prefix
+        verbatim), so scenario traffic naturally exercises the allocator's
+        prefix-trie sharing, partial-page hits, and CoW splits."""
+        if rid % 2:
+            plen = 1 + (rid * 7 + seed) % 5
+            return tuple((seed * 31 + rid * 17 + j * 13) % cls.VOCAB
+                         for j in range(plen))
+        sys_prefix = tuple((seed * 11 + j * 7 + 3) % cls.VOCAB
+                           for j in range(cls.PAGE + 1))
+        if rid % 4 == 0:
+            return sys_prefix
+        tail = 1 + (rid // 2 + seed) % 3
+        return sys_prefix + tuple(
+            (seed * 31 + rid * 17 + j * 13) % cls.VOCAB
+            for j in range(tail))
 
     @classmethod
     def make_max_new(cls, seed: int, rid: int) -> int:
@@ -300,15 +316,22 @@ class SimServeTenant:
                 need = self.alloc.pages_needed(len(req.prompt)
                                                + req.max_new)
                 try:
-                    pages = self.alloc.allocate(req.rid, need)
+                    pages = self.alloc.allocate(req.rid, need,
+                                                tokens=req.prompt)
                 except CacheExhausted:
                     return                      # back off, keep order
                 self.queue.pop(0)
+                shared = self.alloc.shared_count(req.rid)
+                self.shared_hits += shared
                 self.tables[s, :] = 0
                 self.tables[s, :len(pages)] = pages
                 self.pos[s] = len(req.prompt) - 1
+                # shared pages already hold these exact cells (cells are
+                # pure functions of token + absolute index); writing them
+                # would scribble on pages siblings are reading through
                 for i, t in enumerate(req.prompt):
-                    self._write(s, i, self._cell(t, i))
+                    if i >= shared * self.PAGE:
+                        self._write(s, i, self._cell(t, i))
                 tok = self._digest_tok(self._cells_of(s, self.pos[s]))
                 req.out.append(tok)
                 if len(req.out) >= req.max_new:    # finished at prefill
@@ -317,16 +340,44 @@ class SimServeTenant:
                     self.tables[s, :] = 0
                     self.pos[s] = -1
                     continue                        # slot re-offered
+                self.alloc.register_prefix(req.rid)
                 self.last[s] = tok
                 self.active[s] = req
                 break
 
+    def _preempt(self, s: int):
+        """CoW exhaustion valve: drop the slot's work, free its pages and
+        requeue it at the FRONT — tokens are a pure function of request
+        identity, so the recompute is token-identical (I10)."""
+        req = self.active[s]
+        self.alloc.free(req.rid)
+        req.out.clear()
+        self.active[s] = None
+        self.tables[s, :] = 0
+        self.pos[s] = -1
+        self.queue.insert(0, req)
+        self.preemptions += 1
+
     def _engine_step(self):
+        from repro.serve.paged import CacheExhausted
         self._admit()
         for s in range(self.SLOTS):
             req = self.active[s]
             if req is None:
                 continue
+            # copy-on-write: this step's KV cell must land in a PRIVATE
+            # page; a shared one is split first (one page, one table row)
+            pi = (int(self.pos[s]) + 1) // self.PAGE
+            chain = self.alloc.pages_of(req.rid)
+            if self.alloc.refcount(chain[pi]) > 1:
+                try:
+                    old, new = self.alloc.cow(req.rid, pi)
+                except CacheExhausted:
+                    self._preempt(s)
+                    continue
+                self.pages[new] = self.pages[old]
+                self.tables[s, pi] = new
+                self.cow_splits += 1
             self.pos[s] += 1
             self._write(s, int(self.pos[s]),
                         self._cell(int(self.last[s]), int(self.pos[s])))

@@ -94,14 +94,15 @@ def test_dryrun_entrypoint_reduced_mesh(tmp_path):
     assert out.stdout.strip().splitlines()[-1].startswith("ok")
 
 
+@pytest.mark.sweep
 def test_full_sweep_results_complete():
     """The committed dry-run sweep must cover all 40 cells x 2 meshes with
-    no errors (skips only where DESIGN.md §4 documents them)."""
+    no errors (skips only where DESIGN.md §4 documents them). Gated at
+    COLLECTION time (conftest deselects ``sweep`` tests in checkouts
+    without the committed results; ``SVFF_FULL_SWEEP=1`` forces them on)
+    so the suite reports a deselection, never a silent runtime skip."""
     d = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
-    if not os.path.isdir(d) or len([f for f in os.listdir(d)
-                                    if f.endswith(".json")
-                                    and "-" not in f.split("__")[-1]]) < 80:
-        pytest.skip("full sweep not yet complete in this checkout")
+    assert os.path.isdir(d), f"no committed sweep results at {d}"
     statuses = {}
     for fn in os.listdir(d):
         if not fn.endswith(".json"):
