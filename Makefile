@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast chaos chaos-fast bench bench-pause bench-sweep \
-	bench-chaos bench-serve bench-elastic bench-prefix
+	bench-chaos bench-serve bench-elastic bench-prefix bench-migration
 
 test:            ## full tier-1 suite
 	$(PYTHON) -m pytest -x -q
@@ -17,7 +17,7 @@ chaos-fast:      ## PR-gate crash matrix subset
 	$(PYTHON) -m pytest -x -q -m chaos
 
 bench: bench-pause bench-sweep bench-chaos bench-serve bench-elastic \
-	bench-prefix  ## regenerate BENCH_*.json
+	bench-prefix bench-migration  ## regenerate BENCH_*.json
 
 bench-pause:
 	$(PYTHON) benchmarks/pause_path.py --repeats 3 --out BENCH_pause_path.json
@@ -39,3 +39,6 @@ bench-elastic:   ## static vs autoscaled fleet on ramp/spike/diurnal traces
 
 bench-prefix:    ## shared-prefix capacity ratio (CoW sharing vs copy-on-admit)
 	$(PYTHON) benchmarks/prefix_share.py --out BENCH_prefix_share.json
+
+bench-migration: ## request live migration (zero loss, stall, scale-in ITL)
+	$(PYTHON) benchmarks/migration.py --out BENCH_migration.json

@@ -20,8 +20,11 @@ Action kinds:
   rebalance   pick the most-loaded / least-loaded running pair, move
               queued (not-yet-admitted) requests hot -> cold — requests
               that have emitted nothing are free to move (I10-safe) —
-              and migrate the hot victim via pause -> fresh devices ->
-              unpause without dropping its in-flight batch
+              then live-migrate IN-FLIGHT requests through the journaled
+              request-migration op (KV block chains ship hot -> cold,
+              token streams unchanged), and finally migrate the hot
+              victim via pause -> fresh devices -> unpause without
+              dropping its in-flight batch
 
 The policy is deliberately conservative and fully deterministic:
 
@@ -62,6 +65,14 @@ class EngineStats:
     defrag_events: int = 0      # cumulative production defragment() passes
     pages_in_use: int = 0       # allocator pages currently owned
     pages_free: int = 0         # allocator pages currently free
+    # request live migration (zeros when the fleet never migrates):
+    # attempts/outcomes are attributed to the SOURCE engine; stall ticks
+    # count decode iterations a slot sat frozen mid-hand-off
+    migrations_attempted: int = 0
+    migrations_completed: int = 0
+    migrations_aborted: int = 0
+    migration_blocks_shipped: int = 0
+    migration_stall_ticks: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,8 +167,11 @@ def justify_action(action: AutoscaleAction,
         if v.load - t.load < cfg.rebalance_gap:
             return (f"rebalance without imbalance: {v.tid}@{v.load} vs "
                     f"{t.tid}@{t.load} < gap {cfg.rebalance_gap}")
-        if v.queue_depth <= 0:
-            return f"rebalance with nothing queued on {v.tid} to move"
+        if v.queue_depth <= 0 and v.inflight <= 0:
+            # queued requests move for free; in-flight ones move through
+            # the journaled request-migration op — either justifies it
+            return (f"rebalance with nothing queued or in flight on "
+                    f"{v.tid} to move")
     else:
         return f"unknown action kind {action.kind!r}"
     return None
@@ -217,7 +231,8 @@ class Autoscaler:
             if len(running) >= 2:
                 coldest = min(running, key=lambda e: (e.load, e.index))
                 if (hottest.load - coldest.load >= cfg.rebalance_gap
-                        and hottest.queue_depth > 0):
+                        and (hottest.queue_depth > 0
+                             or hottest.inflight > 0)):
                     return AutoscaleAction(
                         "rebalance", snap, victim=hottest.tid,
                         target=coldest.tid,

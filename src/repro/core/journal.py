@@ -35,7 +35,11 @@ ABORTED = "aborted"
 #: sim/invariants.py, and the chaos harness's outcome checks.
 COMPLETED_STATUS = {"attach": "running", "detach": "detached",
                     "pause": "paused", "pause_live": "paused",
-                    "unpause": "running", "migrate": "running"}
+                    "unpause": "running", "migrate": "running",
+                    # request-granular live migration: the SOURCE tenant
+                    # (the journaled tenant) keeps serving its batch, so a
+                    # committed entry still implies "running"
+                    "migrate_request": "running"}
 
 #: ops recovery knows how to reconcile (and I8 knows how to replay)
 JOURNALED_OPS = tuple(COMPLETED_STATUS)

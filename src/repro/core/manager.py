@@ -405,6 +405,83 @@ class SVFFManager:
         return {"migrate_s": time.perf_counter() - t0,
                 "new_devices": [str(d) for d in vf.devices]}
 
+    def migrate_request(self, src: Tenant, dst: Tenant,
+                        rid: Optional[int] = None) -> dict:
+        """Request-granular live migration: ship ONE in-flight request's
+        KV block chain from ``src`` to ``dst`` through the staging
+        descriptor pipeline and resume it there token-identically (I10).
+        The paper's pause/migrate story pushed down from VF granularity
+        to request granularity.
+
+        Ordering is chosen so every step before the source release is
+        non-destructive: peek (pure) -> WAL begin -> extract (freeze +
+        copy) -> ship -> admit on target -> release on source -> commit.
+        A clean failure anywhere (typically target ``CacheExhausted``)
+        rolls back via ``_resolve_failed``: the target admitted nothing,
+        the source thaws the frozen slot and keeps serving the request —
+        the caller may simply retry. Crash windows are catalogued in
+        ``sim/chaos.py`` (mid_extract / mid_ship / after_target_admit /
+        before_source_free); ``recover`` rolls forward iff the target
+        owns the request (invariant I13: live on exactly one engine,
+        source pages freed iff target committed)."""
+        t0 = time.perf_counter()
+        for role, tn in (("source", src), ("target", dst)):
+            if getattr(tn, "status", None) != "running":
+                raise ManagerError(
+                    f"migrate_request: {role} {tn.tid} is "
+                    f"{getattr(tn, 'status', None)}, not running")
+        if src.tid == dst.tid:
+            raise ManagerError(
+                f"migrate_request: source and target are both {src.tid}")
+        for tn, attr in ((src, "extract_request"), (dst, "admit_migrated")):
+            if not hasattr(tn, attr):
+                raise ManagerError(
+                    f"migrate_request: {tn.tid} lacks the request-"
+                    f"migration protocol ({attr})")
+        rid = src.peek_migratable(rid)
+        if rid is None:
+            raise ManagerError(
+                f"migrate_request: {src.tid} has no migratable in-flight "
+                "request")
+        entry = self.journal.begin("migrate_request", src.tid,
+                                   vf_id=src.vf_id, dst=dst.tid, rid=rid)
+        mig_key = f"{src.tid}/mig:{rid}"
+        try:
+            payload = src.extract_request(rid)
+            if payload is None:
+                raise ManagerError(
+                    f"migrate_request: {src.tid} lost request {rid} "
+                    "between peek and extract")
+            # crash window: chain gathered host-side, slot frozen,
+            # nothing destructive yet -> recovery rolls BACK
+            crashpoint("migrate_mid_extract")
+            shipped = self.staging.save(payload["state"], tenant=mig_key)
+            # crash window: descriptor pipeline mid-flight, target
+            # untouched -> recovery rolls BACK
+            crashpoint("migrate_mid_ship")
+            state = self.staging.restore(shipped, None)
+            dst.admit_migrated(payload, state)
+            # crash window: target committed, source still frozen ->
+            # recovery rolls FORWARD (source releases its copy)
+            crashpoint("migrate_after_target_admit")
+            # crash window: same predicate, last instant before the only
+            # destructive step -> recovery rolls FORWARD
+            crashpoint("migrate_before_source_free")
+            src.release_request(rid)
+            self.staging.clear(mig_key)
+            self.journal.commit(entry)
+        except InjectedCrash:
+            raise                      # a crash leaves the intent pending
+        except Exception:
+            # clean failure (target exhausted, admission rejected): the
+            # recovery predicate sees the target does not own the request
+            # and rolls back — frozen slot thaws, source keeps serving
+            self._resolve_failed(entry)
+            raise
+        return {"rid": rid, "src": src.tid, "dst": dst.tid,
+                "blocks": payload.get("chain_len", 0),
+                "migrate_request_s": time.perf_counter() - t0}
+
     def query(self) -> dict:
         return {"pool": self.pool.query(),
                 "tenants": {t.tid: t.query() for t in self.tenants.values()},
@@ -592,6 +669,28 @@ class SVFFManager:
             if status == "running":
                 self.journal.commit(seq, recovered="forward")
             else:
+                self.journal.abort(seq, recovered="rollback")
+
+        elif op == "migrate_request":
+            # request-granular migration. Predicate: the TARGET owns the
+            # request => the admit committed, roll FORWARD (source frees
+            # its copy); otherwise roll BACK (target drops any partial
+            # admission, source thaws the frozen slot and keeps serving).
+            # Every callee is idempotent, so double recovery (I9) holds.
+            rid = e["details"].get("rid")
+            dtn = self.tenants.get(e["details"].get("dst"))
+            self.staging.clear(f"{tid}/mig:{rid}")
+            dst_owns = (dtn is not None and hasattr(dtn, "owns_request")
+                        and dtn.owns_request(rid))
+            if dst_owns:
+                if tn is not None and hasattr(tn, "release_request"):
+                    tn.release_request(rid)
+                self.journal.commit(seq, recovered="forward")
+            else:
+                if dtn is not None and hasattr(dtn, "abort_incoming"):
+                    dtn.abort_incoming(rid)
+                if tn is not None and hasattr(tn, "abort_migration"):
+                    tn.abort_migration(rid)
                 self.journal.abort(seq, recovered="rollback")
 
         else:                                     # unknown op: never applied

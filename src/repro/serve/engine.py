@@ -43,7 +43,7 @@ from repro.configs.base import RunConfig
 from repro.models.model import Model, build_model
 from repro.serve.paged import (BlockAllocator, CacheExhausted,
                                RequestRejected, admit_kv, apply_page_moves,
-                               copy_page, init_paged_cache,
+                               copy_page, extract_kv, init_paged_cache,
                                paged_cache_supported, reset_slot_state)
 
 
@@ -105,6 +105,11 @@ class ServeEngine:
         self.paused = False
         self._finished: list[Request] = []              # completed requests
         self._jobs: dict[int, _PrefillJob] = {}         # slot -> prefill job
+        #: rid -> slot frozen by an in-flight outbound migration. A frozen
+        #: slot keeps its Request/pages/KV (extraction copies, never
+        #: moves), is skipped by decode, and thaws on release (commit) or
+        #: abort — which is why an aborted migration is side-effect-free.
+        self._migrating: dict[int, int] = {}
         #: cache-pressure / sharing counters, pumped into the MetricsBus
         #: by ServeFleet so the autoscaler sees cache pressure, not just
         #: queue depth. Cumulative over the engine's lifetime.
@@ -412,7 +417,15 @@ class ServeEngine:
             return 0
         self._admit()
         self._advance_prefill()
-        act = [s for s in range(self.slots) if self.active[s] is not None]
+        frozen = set(self._migrating.values())
+        if frozen:
+            # a synchronous migration freezes+thaws within one manager op,
+            # so this only ticks when a caller holds the freeze across
+            # steps (or a crash did) — the benchmarked migration stall
+            self.stats["migration_stall_ticks"] += sum(
+                1 for s in frozen if self.active[s] is not None)
+        act = [s for s in range(self.slots)
+               if self.active[s] is not None and s not in frozen]
         if not act:
             return 0
         self._ensure_cache()
@@ -546,6 +559,179 @@ class ServeEngine:
                 self.alloc.free(job.req.rid)
             self.queue.appendleft(job.req)    # dict is admission-ordered
         self._jobs.clear()
+
+    # -- request migration (KV block shipping) --------------------------------
+    # Protocol driven by SVFFManager.migrate_request: peek -> journal ->
+    # extract (freeze, copy) -> ship -> admit on target -> release here.
+    # Everything before release is non-destructive, so any abort (target
+    # CacheExhausted, crash rollback) just thaws the frozen slot and the
+    # source keeps serving the request.
+    def peek_migratable(self, rid: Optional[int] = None) -> Optional[int]:
+        """Pure query: the rid ``extract_request`` would pick — first
+        active decoding slot in slot order (or ``rid`` if it is one).
+        None when nothing is migratable (dense engine, idle, or already
+        mid-migration)."""
+        if not self.paged:
+            return None
+        frozen = set(self._migrating.values())
+        for s in range(self.slots):
+            req = self.active[s]
+            if req is None or s in frozen:
+                continue
+            if rid is None or req.rid == rid:
+                return req.rid
+        return None
+
+    def extract_request(self, rid: Optional[int] = None) -> Optional[dict]:
+        """Freeze one in-flight request and gather everything the target
+        needs to resume it: the Request object, its KV block chain as a
+        dense strip (``extract_kv``), its slot's recurrent state, decode
+        position and last sampled token, and the prompt tokens recorded
+        by the allocator (so the target can re-share trie pages). The
+        source keeps its pages — nothing destructive happens here."""
+        rid = self.peek_migratable(rid)
+        if rid is None:
+            return None
+        slot = next(s for s in range(self.slots)
+                    if self.active[s] is not None
+                    and self.active[s].rid == rid)
+        self._ensure_cache()
+        chain = self.alloc.pages_of(rid)
+        state = extract_kv(self._cache, chain, self.page_size, slot)
+        self._migrating[rid] = slot
+        return {"rid": rid, "req": self.active[slot], "slot": slot,
+                "chain_len": len(chain), "page_size": self.page_size,
+                "tokens": self.alloc.tokens_of(rid),
+                "pos": int(self.pos[slot]),
+                "last": int(self.last_token[slot]),
+                "state": state}
+
+    def admit_migrated(self, payload: dict, state) -> int:
+        """Admit a migrated request into a free slot: allocate a same-
+        length chain (re-sharing trie pages for FULL prompt pages only —
+        the partly-filled last prompt page may already hold this
+        request's decode rows, which a sibling's registered page does
+        not), scatter the shipped strip via ``admit_kv`` skipping the
+        re-shared head, and resume at the shipped pos/last_token. Raises
+        ``CacheExhausted`` (clean, side-effect-free) when no slot or not
+        enough pages. Idempotent: re-admitting an owned rid is a no-op
+        (recovery roll-forward replays)."""
+        rid = payload["rid"]
+        if not self.paged:
+            raise RequestRejected(
+                f"request {rid}: migration target is not a paged engine")
+        if self.owns_request(rid):
+            return next(s for s, r in enumerate(self.active)
+                        if r is not None and r.rid == rid)
+        slot = next((s for s in range(self.slots)
+                     if self.active[s] is None and s not in self._jobs),
+                    None)
+        if slot is None:
+            raise CacheExhausted(
+                f"request {rid}: no free slot on migration target")
+        n = payload["chain_len"]
+        if n > self.tables.shape[1]:
+            raise RequestRejected(
+                f"request {rid}: chain of {n} pages exceeds target table "
+                f"width {self.tables.shape[1]}")
+        if payload["page_size"] != self.page_size:
+            raise RequestRejected(
+                f"request {rid}: page_size {payload['page_size']} != "
+                f"target {self.page_size}")
+        tokens = payload.get("tokens")
+        share = None
+        if self.share_prefix and tokens:
+            share = tokens[:self.page_size * (len(tokens)
+                                              // self.page_size)] or None
+        try:
+            pages = self.alloc.allocate(rid, n, tokens=share)
+        except CacheExhausted:
+            self.stats["cache_exhausted"] += 1
+            self.defragment()
+            self.stats["defrag_events"] += 1
+            pages = self.alloc.allocate(rid, n, tokens=share)
+        shared = self.alloc.shared_count(rid)
+        self.stats["shared_page_hits"] += shared
+        self._ensure_cache()
+        self._cache = admit_kv(self._cache,
+                               jax.tree.map(jnp.asarray, state), pages,
+                               self.page_size, slot, skip_pages=shared)
+        row = self.tables[slot]
+        row[:] = 0
+        row[:len(pages)] = pages
+        self.active[slot] = payload["req"]
+        self.pos[slot] = payload["pos"]
+        self.last_token[slot] = payload["last"]
+        if self.share_prefix and share:
+            self.alloc.register_prefix(rid)
+        self.stats["migrations_in"] += 1
+        self.stats["migration_blocks_shipped"] += n - shared
+        self._dirty |= {"cache", "pos", "last_token", "tables"}
+        return slot
+
+    def release_request(self, rid: int) -> bool:
+        """Commit side of an outbound migration: the target owns the
+        request now, so free our pages and recycle the frozen slot.
+        Idempotent (False when rid is not frozen here) — recovery may
+        roll the same release forward twice."""
+        slot = self._migrating.pop(rid, None)
+        if slot is None:
+            return False
+        self.active[slot] = None
+        self._reset_slot(slot, rid=rid)
+        self.stats["migrations_out"] += 1
+        self._dirty |= {"cache", "pos", "tables"}
+        return True
+
+    def abort_migration(self, rid: int) -> bool:
+        """Abort side: thaw the frozen slot. The request never stopped
+        being ours (pages, KV, Request object all untouched), so decode
+        resumes next step exactly where it froze."""
+        return self._migrating.pop(rid, None) is not None
+
+    def abort_incoming(self, rid: int):
+        """Target-side rollback: drop any (possibly partial) admission of
+        ``rid``. Idempotent no-op when we never admitted it."""
+        if not self.paged or rid not in self.alloc.owners():
+            return
+        for s, req in enumerate(self.active):
+            if req is not None and req.rid == rid:
+                self.active[s] = None
+                self._reset_slot(s, rid=rid)
+                return
+        self.alloc.free(rid)
+
+    def owns_request(self, rid: int) -> bool:
+        """Commit predicate for migration recovery: does this engine hold
+        ``rid`` live (an active slot, a prefill job, the queue, or pages
+        in its allocator)?"""
+        if any(r is not None and r.rid == rid for r in self.active):
+            return True
+        if any(j.req.rid == rid for j in self._jobs.values()):
+            return True
+        if any(r.rid == rid for r in self.queue):
+            return True
+        return self.paged and rid in self.alloc.owners()
+
+    def reset_after_crash(self):
+        """Model an engine-process crash: device state (cache, page pool,
+        block tables) is lost, every queued/active request is gone. The
+        fleet re-homes the victim's requests onto siblings BEFORE calling
+        this (``ServeFleet.recover_engine``); afterwards the engine is
+        empty but servable again."""
+        self.queue.clear()
+        self._jobs.clear()
+        self._finished.clear()
+        self._migrating.clear()
+        self.active = [None] * self.slots
+        self.pos = np.full((self.slots,), -1, np.int64)
+        self.last_token = np.zeros((self.slots,), np.int32)
+        self._cache = None
+        if self.paged:
+            self.alloc = BlockAllocator(self.num_pages, self.page_size)
+            self.tables = np.zeros_like(self.tables)
+            self._dirty.add("tables")
+        self._dirty |= {"params", "cache", "pos", "last_token"}
 
     def run_until_idle(self, max_steps: int = 10_000) -> DrainResult:
         """Drive the engine until queue and slots drain; returns every

@@ -52,7 +52,7 @@ from repro.core.pool import DevicePool
 from repro.core.tenant import DevicePausedError
 from repro.core.vf import VFState, VirtualFunction
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.paged import RequestRejected
+from repro.serve.paged import CacheExhausted, RequestRejected
 from repro.serve.telemetry import MetricsBus
 
 
@@ -150,6 +150,34 @@ class EngineTenant:
         self.engine._cache = None
         self.vf_id = None
         self.status = "detached"
+
+    # -- request live migration (delegated to the engine) --------------------
+    # the manager's migrate_request op speaks this protocol on the
+    # TENANT, so the adapter forwards it 1:1 — EngineTenant and
+    # SimServeTenant stay interchangeable under SVFFManager
+    def peek_migratable(self, rid: Optional[int] = None):
+        return self.engine.peek_migratable(rid)
+
+    def extract_request(self, rid: Optional[int] = None) -> dict:
+        return self.engine.extract_request(rid)
+
+    def admit_migrated(self, payload: dict, state) -> int:
+        return self.engine.admit_migrated(payload, state)
+
+    def release_request(self, rid: int) -> None:
+        self.engine.release_request(rid)
+
+    def abort_migration(self, rid: int) -> None:
+        self.engine.abort_migration(rid)
+
+    def abort_incoming(self, rid: int) -> None:
+        self.engine.abort_incoming(rid)
+
+    def owns_request(self, rid: int) -> bool:
+        return self.engine.owns_request(rid)
+
+    def reset_after_crash(self) -> None:
+        self.engine.reset_after_crash()
 
     # -- introspection -------------------------------------------------------
     @property
@@ -282,6 +310,8 @@ class ServeFleet:
                 self.telemetry.record_cache_pressure(
                     tn.tid, tn.engine.stats["cache_exhausted"],
                     tn.engine.stats["defrag_events"])
+                self.telemetry.record_migration_stall(
+                    tn.tid, tn.engine.stats["migration_stall_ticks"])
                 # harvest only the suffix of _finished not yet scanned —
                 # the list is cleared by drain, and rescanning it whole
                 # would make the hot path O(completed history)
@@ -335,6 +365,29 @@ class ServeFleet:
     def migrate(self, tid: str):
         return self.mgr.migrate(self.tenants[tid])
 
+    def migrate_request(self, src: str, dst: str,
+                        rid: Optional[int] = None, *,
+                        retries: int = 2) -> Optional[dict]:
+        """Live-migrate one in-flight request ``src -> dst`` through the
+        journaled manager op. A target-side ``CacheExhausted`` aborts the
+        attempt CLEANLY — journal rolled back, the request untouched and
+        still decoding on the source — and the target defragments before
+        the bounded retry. Returns the manager's result dict (rid /
+        blocks shipped / timing), or None when every attempt aborted."""
+        s, d = self.tenants[src], self.tenants[dst]
+        for attempt in range(1 + retries):
+            try:
+                res = self.mgr.migrate_request(s, d, rid)
+            except CacheExhausted:
+                self.telemetry.record_migration(src, dst, completed=False)
+                if attempt < retries:
+                    d.engine.defragment()     # compact, then retry
+                continue
+            self.telemetry.record_migration(src, dst, completed=True,
+                                            blocks=res["blocks"])
+            return res
+        return None
+
     # -- the elastic control plane --------------------------------------------
     def _free_vfs(self) -> list:
         """Attachable VFs: detached, unowned, still holding devices. One
@@ -363,7 +416,15 @@ class ServeFleet:
                 cache_exhausted=eng.stats["cache_exhausted"],
                 defrag_events=eng.stats["defrag_events"],
                 pages_in_use=eng.alloc.pages_in_use if paged else 0,
-                pages_free=eng.alloc.num_free if paged else 0))
+                pages_free=eng.alloc.num_free if paged else 0,
+                migrations_attempted=(
+                    self.telemetry.migrations_attempted[tid]),
+                migrations_completed=(
+                    self.telemetry.migrations_completed[tid]),
+                migrations_aborted=self.telemetry.migrations_aborted[tid],
+                migration_blocks_shipped=self.telemetry.migration_blocks[tid],
+                migration_stall_ticks=(
+                    eng.stats["migration_stall_ticks"])))
         return TelemetrySnapshot(
             epoch=self._epoch, slo_max_load=self.slo_max_load,
             engines=tuple(stats), free_vfs=len(self._free_vfs()),
@@ -425,19 +486,62 @@ class ServeFleet:
         return tn.tid
 
     def scale_in(self, tid: str) -> str:
-        """Park an IDLE engine: journaled detach (state snapshots to
-        disk, the VF keeps its devices and becomes attachable). Refuses
-        while the engine holds ANY work — queued, in-flight prefill, or
-        active decode slots — those requests would strand."""
+        """Park an engine: journaled detach (state snapshots to disk,
+        the VF keeps its devices and becomes attachable). A BUSY engine
+        drains first — in-flight chunked prefills abort back to its
+        queue (they have emitted nothing), queued requests resubmit to
+        running siblings under the SLO admission bound, and active
+        decode slots LIVE-MIGRATE (journaled KV hand-off, token streams
+        unchanged). Typed refusal when no sibling has the capacity —
+        every request the drain already moved stays live on its new
+        engine, nothing strands."""
         tn = self.tenants[tid]
         if tn.status != "running":
             raise ManagerError(f"scale_in: {tid} is {tn.status}")
         if tn.load:      # load = queued + in-flight prefill + active slots
-            raise ManagerError(
-                f"scale_in: {tid} is busy (load {tn.load}, "
-                f"{len(tn.engine._jobs)} prefill jobs)")
+            self._drain_for_scale_in(tn)
         self.mgr.detach(tn)
         return tid
+
+    def _drain_for_scale_in(self, tn: EngineTenant) -> None:
+        sibs = [t for t in self.tenants.values()
+                if t.status == "running" and t.tid != tn.tid]
+        if not sibs:
+            raise ManagerError(
+                f"scale_in: {tn.tid} is busy (load {tn.load}) and has "
+                "no running sibling to drain to")
+
+        def best():
+            return min(sibs, key=lambda t: (t.load, self._order[t.tid]))
+        # chunked prefills re-queue deterministically (nothing emitted)
+        tn.engine.abort_prefill_jobs()
+        while tn.engine.queue:
+            pick = best()
+            if pick.load >= self.slo_max_load:
+                raise ManagerError(
+                    f"scale_in: no sibling admission capacity for "
+                    f"{tn.tid}'s queued requests (best {pick.tid}@"
+                    f"{pick.load} >= {self.slo_max_load})")
+            pick.engine.submit(tn.engine.queue.pop())
+            self.telemetry.record_submit(pick.tid)
+        # active decode slots: journaled live migration with bounded
+        # per-sibling retries (migrate_request defragments in between)
+        while (rid := tn.peek_migratable()) is not None:
+            for t in sorted(sibs,
+                            key=lambda t: (t.load, self._order[t.tid])):
+                if (t.load < self.slo_max_load and
+                        self.migrate_request(tn.tid, t.tid,
+                                             rid) is not None):
+                    break
+            else:
+                raise ManagerError(
+                    f"scale_in: no sibling has KV capacity for in-"
+                    f"flight request {rid} on {tn.tid}")
+        if tn.load:
+            # dense engines (no paged KV) can't ship active slots
+            raise ManagerError(
+                f"scale_in: {tn.tid} still busy after drain "
+                f"(load {tn.load}) — active work is not migratable")
 
     def rebalance(self, src: str, dst: str,
                   migrate: Optional[bool] = None) -> int:
@@ -452,12 +556,61 @@ class ServeFleet:
             # steal from the BACK: the oldest requests keep their engine
             d.engine.submit(s.engine.queue.pop())
             moved += 1
+        # queue-stealing can't close the gap when the hot engine's load
+        # is IN-FLIGHT: live-migrate idle decode slots hot -> cold
+        # through the journaled op. An abort (target KV full even after
+        # its defrag retries) ends the steal — the request stays live
+        # and decoding on the source.
+        while (s.status == "running" and d.status == "running"
+               and s.load - d.load > 1
+               and s.peek_migratable() is not None):
+            if self.migrate_request(src, dst) is None:
+                break
+            moved += 1
         if migrate is None:
             migrate = (self.autoscale_config.rebalance_migrate
                        if self.autoscale_config else True)
         if migrate and s.status == "running":
             self.mgr.migrate(s)
         return moved
+
+    def recover_engine(self, tid: str) -> dict:
+        """An engine CRASHED mid-serving (its device state is gone):
+        re-home every live request onto running siblings by
+        deterministic recompute — emitted tokens are cleared and
+        regenerate bit-identically from the prompt (the counter-seeded
+        sampler keys on (seed, rid, position), not on engine identity)
+        — then reset the victim to a clean, re-servable state. Typed
+        refusal BEFORE any mutation when the siblings lack admission
+        capacity, so the caller can scale out first and retry."""
+        tn = self.tenants[tid]
+        eng = tn.engine
+        live = [r for r in ([j.req for j in eng._jobs.values()]
+                            + list(eng.queue)
+                            + [r for r in eng.active if r is not None])
+                if not r.done]
+        sibs = [t for t in self.tenants.values()
+                if t.status == "running" and t.tid != tid]
+        if live and not sibs:
+            raise ManagerError(
+                f"recover_engine: {tid} holds {len(live)} live requests "
+                "and no sibling is running")
+        headroom = sum(max(0, self.slo_max_load - t.load) for t in sibs)
+        if len(live) > headroom:
+            raise ManagerError(
+                f"recover_engine: siblings have admission headroom for "
+                f"{headroom} requests, {tid} holds {len(live)}")
+        eng.reset_after_crash()
+        self._harvested[tid] = 0
+        rehomed = []
+        for req in live:
+            req.out.clear()
+            req.t_tok.clear()
+            pick = min(sibs, key=lambda t: (t.load, self._order[t.tid]))
+            pick.engine.submit(req)
+            self.telemetry.record_submit(pick.tid)
+            rehomed.append((req.rid, pick.tid))
+        return {"tid": tid, "rehomed": rehomed}
 
     def query(self) -> dict:
         return {"manager": self.mgr.query(),

@@ -302,6 +302,11 @@ class BlockAllocator:
     def pages_of(self, rid: int) -> list[int]:
         return list(self._owned.get(rid, []))
 
+    def tokens_of(self, rid: int) -> Optional[tuple]:
+        """The prompt tokens recorded at allocate time (what migration
+        ships so the target allocator can re-share trie pages)."""
+        return self._tokens.get(rid)
+
     def owners(self) -> dict[int, list[int]]:
         return {rid: list(p) for rid, p in self._owned.items()}
 
@@ -436,6 +441,26 @@ def admit_kv(cache: dict, req_cache: dict, page_ids, page_size: int,
             pooled, req_leaf.astype(pooled.dtype),
             (0, slot) + (0,) * (pooled.ndim - 2))
     return jax.tree_util.tree_map_with_path(one, cache, req_cache)
+
+
+def extract_kv(cache: dict, page_ids, page_size: int, slot: int) -> dict:
+    """Gather dual of ``admit_kv``, for request migration: pull a
+    request's KV block chain out of the page pools into a dense
+    (nper, 1, n*page_size, K, hd) request tree, and slice its batch slot
+    out of every dense (recurrent-state) leaf, keeping the slot axis.
+    The result has exactly the shape ``admit_kv`` scatters, so target-
+    side admission IS ``admit_kv(..., skip_pages=n_reshared)``."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    n = int(ids.shape[0])
+
+    def one(path, leaf):
+        if _is_kv(path):
+            nper, _, P, K, hd = leaf.shape
+            return leaf[:, ids].reshape(nper, 1, n * P, K, hd)
+        return jax.lax.dynamic_slice(
+            leaf, (0, slot) + (0,) * (leaf.ndim - 2),
+            (leaf.shape[0], 1) + leaf.shape[2:])
+    return jax.tree_util.tree_map_with_path(one, cache)
 
 
 def copy_page(cache: dict, src: int, dst: int) -> dict:

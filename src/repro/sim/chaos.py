@@ -43,7 +43,7 @@ from repro.core.qmp import ControlPlane
 from repro.core.staging import StagingEngine
 from repro.sim.clock import VirtualClock
 from repro.sim.invariants import InvariantViolation, check_invariants
-from repro.sim.tenant import SimTenant
+from repro.sim.tenant import SimServeTenant, SimTenant
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +79,24 @@ CRASH_POINTS: dict[str, CrashSpec] = {s.point: s for s in (
               "VF re-attached, guest not yet resumed"),
     CrashSpec("qmp_timeout", ("qmp",), "none",
               "command applied, monitor died before the response"),
+    # -- request-granular live migration (PR 7). outcome names the
+    # MIGRATION's fate: "none" == the request stays on the source (roll
+    # back), "complete" == it resumes on the target (roll forward). The
+    # source tenant's status is "running" either way (that is what
+    # COMPLETED_STATUS["migrate_request"] encodes for I8).
+    CrashSpec("migrate_mid_extract", ("migrate_request",), "none",
+              "chain gathered host-side, source slot frozen; nothing "
+              "destructive has run"),
+    CrashSpec("migrate_mid_ship", ("migrate_request",), "none",
+              "KV block descriptors mid-pipeline; target untouched"),
+    CrashSpec("migrate_after_target_admit", ("migrate_request",),
+              "complete",
+              "target admitted the request (owns pages + slot); source "
+              "still frozen — recovery releases the source copy"),
+    CrashSpec("migrate_before_source_free", ("migrate_request",),
+              "complete",
+              "last instant before the only destructive step; same "
+              "target-owns predicate rolls forward"),
 )}
 
 
@@ -146,6 +164,12 @@ def _fire(mgr: SVFFManager, trigger: str, point: str,
             mgr.unpause(victim)
         elif trigger == "qmp":
             ControlPlane(mgr).execute({"execute": "query-status"})
+        elif trigger == "migrate_request":
+            dst = next(tn for tid, tn in sorted(mgr.tenants.items())
+                       if tn is not victim
+                       and getattr(tn, "status", None) == "running"
+                       and hasattr(tn, "admit_migrated"))
+            mgr.migrate_request(victim, dst)
         else:
             raise ValueError(f"unknown crash trigger {trigger!r}")
         raise InvariantViolation(
@@ -178,19 +202,41 @@ def run_crash_case(point: str, seed: int, policy: str = "first_fit",
                                      placement=policy)
             return tenants[tid]
 
-        bystander, other = make("vm0", seed * 13 + 1), make("vm1",
-                                                            seed * 13 + 2)
-        mgr.init(num_vfs=3, tenants=[bystander, other], devices_per_vf=2)
-        bystander.run_steps(1 + seed % 3)
-        other.run_steps(1 + (seed // 3) % 3)
-
-        if trigger == "unpause":
-            mgr.pause(other)
-            victim = other
-        elif trigger == "attach":
-            victim = make("vm2", seed * 13 + 3)
+        bystander = make("vm0", seed * 13 + 1)
+        mig_rid = target = None
+        if trigger == "migrate_request":
+            # serve-shaped cell: sv0 decodes a request mid-flight, sv1 is
+            # the (idle, capacious) migration target
+            victim = SimServeTenant("sv0", seed=seed * 13 + 2,
+                                    clock=clock, placement=policy)
+            target = SimServeTenant("sv1", seed=seed * 13 + 3,
+                                    clock=clock, placement=policy)
+            tenants[victim.tid], tenants[target.tid] = victim, target
+            mgr.init(num_vfs=4, tenants=[bystander, victim, target],
+                     devices_per_vf=2)
+            bystander.run_steps(1 + seed % 3)
+            victim.submit_burst(3)
+            for _ in range(6):               # drive to a decoding slot
+                victim.run_steps(1)
+                if victim.peek_migratable() is not None:
+                    break
+            mig_rid = victim.peek_migratable()
+            if mig_rid is None:
+                raise InvariantViolation(
+                    "setup: sv0 never reached an in-flight request")
         else:
-            victim = other
+            other = make("vm1", seed * 13 + 2)
+            mgr.init(num_vfs=3, tenants=[bystander, other],
+                     devices_per_vf=2)
+            bystander.run_steps(1 + seed % 3)
+            other.run_steps(1 + (seed // 3) % 3)
+            if trigger == "unpause":
+                mgr.pause(other)
+                victim = other
+            elif trigger == "attach":
+                victim = make("vm2", seed * 13 + 3)
+            else:
+                victim = other
         check_invariants(mgr)
         pre_status = victim.status
         pre_steps = {tid: tn.steps_done for tid, tn in tenants.items()}
@@ -217,6 +263,40 @@ def run_crash_case(point: str, seed: int, policy: str = "first_fit",
                 raise InvariantViolation(
                     f"step counter drift for {tid} across crash+recover: "
                     f"{tenants[tid].steps_done} != {steps + add}")
+
+        if trigger == "migrate_request":
+            # I13 sharpened per-cell: the request survives on exactly the
+            # cataloged side, no slot stays frozen, and driving both
+            # engines to completion yields the no-migration oracle token
+            # stream (extended I10 — zero in-flight work lost)
+            owner, loser = ((target, victim) if spec.outcome == "complete"
+                            else (victim, target))
+            if not owner.owns_request(mig_rid):
+                raise InvariantViolation(
+                    f"migration outcome: {owner.tid} should own request "
+                    f"{mig_rid} after {point} recovery, but does not")
+            if loser.owns_request(mig_rid):
+                raise InvariantViolation(
+                    f"migration outcome: request {mig_rid} live on BOTH "
+                    f"engines after {point} recovery")
+            if victim._migrating:
+                raise InvariantViolation(
+                    f"frozen slot survived recovery: {victim._migrating}")
+            req = next(r for r in victim.requests if r.rid == mig_rid)
+            for _ in range(40):
+                victim.run_steps(1)
+                target.run_steps(1)
+                if req.done:
+                    break
+            if not req.done:
+                raise InvariantViolation(
+                    f"request {mig_rid} stranded after {point} recovery")
+            oracle = SimServeTenant.expected_output(req.seed, req.rid)
+            if req.out != oracle:
+                raise InvariantViolation(
+                    f"I10 after migration crash: request {mig_rid} "
+                    f"emitted {req.out}, oracle {oracle}")
+            check_invariants(mgr)
 
         # post-recovery liveness: survivors still reconfigure and step
         # with bit-identical state

@@ -33,6 +33,7 @@ from repro.core.records import RecordError
 from repro.core.staging import StagingEngine
 from repro.core.tenant import DevicePausedError
 from repro.core.vf import VFState, VFTransitionError
+from repro.serve.paged import CacheExhausted
 from repro.sim.chaos import _fire, recover_manager
 from repro.sim.clock import VirtualClock
 from repro.sim.invariants import (InvariantViolation, check_autoscale,
@@ -107,7 +108,15 @@ class ScenarioRunner:
         self.sup: Optional[Supervisor] = None
         self.tenants: dict[str, SimTenant] = {}
         self.expected_steps: dict[str, int] = {}
-        self.autoscaler = Autoscaler(SIM_AUTOSCALE)
+        autocfg = SIM_AUTOSCALE
+        if cfg.migrate_rate > 0:
+            # with migration traffic the scenario attaches sv1 as a
+            # fixed migration target — pin it like sv0 so the
+            # autoscaler can't scale it in under the generator's
+            # validity model (which schedules ops against sv1)
+            autocfg = dataclasses.replace(SIM_AUTOSCALE,
+                                          pinned=("sv0", "sv1"))
+        self.autoscaler = Autoscaler(autocfg)
         self._as_epoch = 0
         self._last_autoscale = None       # pending I11 check
 
@@ -214,6 +223,26 @@ class ScenarioRunner:
         elif op.kind == "autoscale":
             self._autoscale_step()
             clock.advance(0.005)
+        elif op.kind == "migrate_request":
+            # deterministic pair pick among the running serving engines:
+            # source = first (sorted) one with a migratable in-flight
+            # request, target = first other running one. No such pair is
+            # a no-op — the op is about what happens WHEN a migration
+            # runs, not about manufacturing one — and a target-side
+            # CacheExhausted is a clean journaled abort (the source
+            # keeps serving, invariant I13 still checked after the op).
+            svs = [tn for tn in self._serve_tenants()
+                   if tn.status == "running"]
+            src = next((tn for tn in svs
+                        if tn.peek_migratable() is not None), None)
+            dst = next((tn for tn in svs
+                        if src is not None and tn.tid != src.tid), None)
+            if src is not None and dst is not None:
+                try:
+                    mgr.migrate_request(src, dst)
+                except CacheExhausted:
+                    pass
+                clock.advance(0.01)
         elif op.kind == "crash":
             # kill the manager at the named crash point mid-trigger-op,
             # then rebuild it via SVFFManager.recover (with the I9
@@ -294,12 +323,25 @@ class ScenarioRunner:
         else:                                     # rebalance
             src = self.tenants[action.victim]
             dst = self.tenants[action.target]
-            while src.queue and (len(src.queue)
-                                 + sum(r is not None for r in src.active)
-                                 - len(dst.queue)
-                                 - sum(r is not None for r in dst.active)
-                                 ) > 1:
+
+            def _gap(a, b):
+                return (len(a.queue)
+                        + sum(r is not None for r in a.active)
+                        - len(b.queue)
+                        - sum(r is not None for r in b.active))
+            while src.queue and _gap(src, dst) > 1:
                 dst.queue.append(src.queue.pop())
+            # queue-stealing alone can't close the gap when the hot
+            # engine's load is IN-FLIGHT: steal live requests through
+            # the journaled migration op. CacheExhausted (target KV
+            # full) or a manager refusal ends the steal cleanly — the
+            # request stays live on the source.
+            while (_gap(src, dst) > 1
+                   and src.peek_migratable() is not None):
+                try:
+                    self.mgr.migrate_request(src, dst)
+                except (CacheExhausted, ManagerError):
+                    break
             self.mgr.migrate(src)
 
     # ----------------------------------------------------------------- run

@@ -54,6 +54,18 @@
       free) frees a page a prefix-sharing sibling still reads through;
       a CoW that repoints the chain but not the table row (or vice
       versa) makes reads and ownership disagree — both surface here
+  I13 request-migration liveness: across all serve-shaped tenants, every
+      request is LIVE (queued, active, or prefilling) on at most one
+      engine, every rid that owns allocator pages corresponds to a
+      request live on that same engine, and the same rid never owns
+      pages in two allocators — i.e. the source's pages are freed iff
+      the target committed, and an aborted/crashed migration never
+      leaves a request duplicated, stranded, or page-orphaned. A slot
+      frozen by an in-flight migration counts as live on the SOURCE
+      (extraction copies, never moves). I10 extends across migration:
+      a migrated request's token stream still equals its no-migration
+      oracle, because extraction ships the exact page bytes plus
+      pos/last_token and sampling is counter-seeded
 
 Violations raise ``InvariantViolation`` tagged by the caller with the
 scenario seed and op index, which is all that is needed to reproduce.
@@ -249,6 +261,42 @@ def check_invariants(mgr) -> None:
                 if row != chain:
                     _fail(f"I12 {tid} slot {s}: table row {row} != "
                           f"allocator chain {chain} for rid {req.rid}")
+
+    # -- I13: request-migration liveness ---------------------------------------
+    # Every request is live on at most ONE engine, and page ownership
+    # follows liveness: a rid owning allocator pages must be live (active,
+    # prefilling, or mid-migration-frozen — all of which keep the request
+    # in ``active``/``_jobs``) on that same engine. Together these say a
+    # migration frees the source's pages iff the target committed, and
+    # never duplicates or strands a request.
+    live_on: dict = {}                         # rid -> hosting tid
+    for tid, tn in mgr.tenants.items():
+        host = tn if hasattr(tn, "alloc") else getattr(tn, "engine", None)
+        if host is None or not hasattr(host, "active"):
+            continue
+        live_here = ([r for r in getattr(host, "queue", ()) ]
+                     + [r for r in host.active if r is not None]
+                     + [j.req for j in getattr(host, "_jobs", {}).values()])
+        seen_here: set = set()
+        for req in live_here:
+            rid = req.rid
+            if rid in seen_here:
+                _fail(f"I13 {tid}: request {rid} appears twice on one "
+                      f"engine (queue/slots/jobs)")
+            seen_here.add(rid)
+            if rid in live_on:
+                _fail(f"I13 request {rid} live on BOTH {live_on[rid]} "
+                      f"and {tid} (migration duplicated it)")
+            live_on[rid] = tid
+        alloc = getattr(host, "alloc", None)
+        if alloc is None:
+            continue
+        for rid in alloc.owners():
+            if rid not in seen_here:
+                _fail(f"I13 {tid}: allocator pages owned by rid {rid} "
+                      f"with no live request on this engine (source "
+                      f"pages not freed after a committed migration, or "
+                      f"a leaked admission)")
 
 
 def check_autoscale(action, cfg) -> None:

@@ -38,6 +38,13 @@ Op kinds (the paper's management surface + fault injection):
            serving tenant / detach an idle one / move queued requests
            hot->cold + migrate) through the journaled manager ops;
            invariant I11 then checks the action against the snapshot
+  migrate_request  live-migrate one in-flight request between running
+           serving engines through the journaled manager op: extract
+           its KV block chain on the source, ship it through the
+           staging pipeline, admit it on the target, free the source
+           pages; invariant I13 then checks single ownership and I10
+           that the request's token stream is unchanged (a
+           CacheExhausted abort on the target is a legal, clean no-op)
 
 The generator keeps a conservative validity model (who is running/paused/
 detached, how many VFs exist) so sequences are mostly executable, and —
@@ -57,7 +64,7 @@ from typing import Optional
 
 OP_KINDS = ("init", "attach", "detach", "pause", "pause_live", "unpause",
             "reconf", "migrate", "fault", "step", "crash",
-            "serve_submit", "serve_step", "autoscale")
+            "serve_submit", "serve_step", "autoscale", "migrate_request")
 
 #: arrival-pattern shapes for serve_submit bursts ("bursty" is the
 #: original mix and the default; the others model the traffic traces the
@@ -104,6 +111,14 @@ class ScenarioConfig:
     # the scenario emits ``autoscale`` ops; the harness runs one policy-
     # loop epoch per op and I11 checks every action it takes
     autoscale_rate: float = 0.0
+    # request live migration (0 keeps earlier sequences byte-identical):
+    # at this rate — only meaningful with serve_rate > 0 — the scenario
+    # attaches a second serving engine "sv1" at init and emits
+    # ``migrate_request`` ops; the harness deterministically picks a
+    # (src, dst) pair among the running serving engines and runs the
+    # journaled ``SVFFManager.migrate_request`` op (no migratable
+    # request / no pair is a no-op; CacheExhausted is a clean abort)
+    migrate_rate: float = 0.0
     # serve_submit burst shape (see ARRIVAL_PATTERNS): "bursty" (default,
     # the original draw), "ramp" (bursts grow across the scenario),
     # "spike" (mostly quiet with rare large bursts), "diurnal" (sinusoid)
@@ -120,19 +135,24 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
     rng = random.Random(0x5FF ^ (cfg.seed * 2654435761 % 2**31))
     ops: list[Op] = []
     serve = cfg.serve_rate > 0 and cfg.max_vfs >= 2
+    mig = serve and cfg.migrate_rate > 0
 
     nvf = rng.randint(1, min(4, cfg.max_vfs))
     per = rng.choice([1, 2]) if cfg.num_devices >= 4 * nvf else 1
     m = rng.randint(1, nvf)
     if serve:
-        # make room for the dedicated serving tenant sv0: one more VF
+        # make room for the dedicated serving tenant sv0 (and, with
+        # migration traffic, the target engine sv1): one/two more VFs
         # than train tenants, within BOTH the VF and the device budget
-        nvf = min(max(nvf, m + 1), cfg.max_vfs, cfg.num_devices)
-        m = min(m, nvf - 1) or 1
+        extra = 2 if mig else 1
+        nvf = min(max(nvf, m + extra), cfg.max_vfs, cfg.num_devices)
+        m = min(m, nvf - extra) or 1
         if per * nvf > cfg.num_devices:
             per = 1
         if nvf < 2:
-            serve = False            # no room for a second VF: no sv0
+            serve = mig = False      # no room for a second VF: no sv0
+        elif nvf < m + 2:
+            mig = False              # no room for sv1: no migrations
     ops.append(Op("init", num_vfs=nvf, devices_per_vf=per, num_tenants=m))
 
     # validity model
@@ -148,6 +168,13 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
         ops.append(Op("serve_submit", tenant="sv0",
                       burst=rng.choice([1, 2, 3])))
         running.append("sv0")
+        if mig:
+            # the migration target engine: joins the shared validity
+            # model like sv0 (pause/unpause/migrate/step may pick it;
+            # detach/fault never do), so migrate_request ops compose
+            # with live pauses and autoscaling
+            ops.append(Op("attach", tenant="sv1"))
+            running.append("sv1")
 
     def tenant_count():
         return len(running) + len(paused) + len(detached) + 0
@@ -159,6 +186,12 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
         if serve and cfg.autoscale_rate and \
                 rng.random() < cfg.autoscale_rate:
             ops.append(Op("autoscale"))
+            continue
+        if mig and rng.random() < cfg.migrate_rate:
+            # harness picks the (src, dst) pair deterministically among
+            # the running serving engines; no pair / nothing in flight
+            # is a no-op, so the op is valid regardless of model state
+            ops.append(Op("migrate_request"))
             continue
         if serve and rng.random() < cfg.serve_rate:
             op = _serve_op(rng, cfg, len(ops) / max(cfg.num_ops, 1),
@@ -306,6 +339,12 @@ def _crash_op(rng, cfg, running, paused, detached, total_vfs,
                     cands.append((point, trig, f"vm{next_id}"))
             elif trig == "qmp":
                 cands.append((point, trig, None))
+            elif trig == "migrate_request":
+                # needs an in-flight request on a serving engine plus
+                # target-side KV headroom — preconditions the validity
+                # model cannot track; the migration crash windows are
+                # covered by the run_crash_case matrix instead
+                continue
     if not cands:
         return None
     point, trig, t = cands[rng.randrange(len(cands))]

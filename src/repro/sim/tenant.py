@@ -233,6 +233,13 @@ class SimServeTenant:
         self.shared_hits = 0              # pages admitted without a copy
         self.cow_splits = 0               # decode writes that split a page
         self.preemptions = 0              # CoW exhaustion -> recompute
+        #: rid -> slot frozen by an in-flight outbound migration (mirrors
+        #: ServeEngine._migrating): the slot keeps its request/pages, is
+        #: skipped by decode, thaws on release (commit) or abort
+        self._migrating: dict = {}
+        self.migrations_in = 0
+        self.migrations_out = 0
+        self.migration_stall_ticks = 0
 
     # ----------------------------------------------------- the toy "model"
     @classmethod
@@ -361,9 +368,13 @@ class SimServeTenant:
     def _engine_step(self):
         from repro.serve.paged import CacheExhausted
         self._admit()
+        frozen = set(self._migrating.values())
         for s in range(self.SLOTS):
             req = self.active[s]
             if req is None:
+                continue
+            if s in frozen:               # mid-migration: slot is frozen
+                self.migration_stall_ticks += 1
                 continue
             # copy-on-write: this step's KV cell must land in a PRIVATE
             # page; a shared one is split first (one page, one table row)
@@ -390,6 +401,111 @@ class SimServeTenant:
                 self.active[s] = None
                 self.tables[s, :] = 0
                 self.pos[s] = -1
+
+    # -- request migration (mirrors ServeEngine's protocol) -----------------
+    def peek_migratable(self, rid=None):
+        """Pure query: the rid ``extract_request`` would pick."""
+        frozen = set(self._migrating.values())
+        for s in range(self.SLOTS):
+            req = self.active[s]
+            if req is None or s in frozen:
+                continue
+            if rid is None or req.rid == rid:
+                return req.rid
+        return None
+
+    def extract_request(self, rid=None):
+        """Freeze one in-flight request and copy out everything the
+        target needs: page bytes of its chain, pos, last token, prompt
+        tokens (for trie re-sharing). Non-destructive — the source keeps
+        its pages until ``release_request``."""
+        rid = self.peek_migratable(rid)
+        if rid is None:
+            return None
+        slot = next(s for s in range(self.SLOTS)
+                    if self.active[s] is not None
+                    and self.active[s].rid == rid)
+        chain = self.alloc.pages_of(rid)
+        self._migrating[rid] = slot
+        return {"rid": rid, "req": self.active[slot], "slot": slot,
+                "chain_len": len(chain), "page_size": self.PAGE,
+                "tokens": self.alloc.tokens_of(rid),
+                "pos": int(self.pos[slot]), "last": int(self.last[slot]),
+                "state": {"cells": self.pages[chain].copy()}}
+
+    def admit_migrated(self, payload, state):
+        """Admit a migrated request into a free slot. Re-shares trie
+        pages for FULL prompt pages only — the partly-filled last prompt
+        page may already hold this request's decode cells, which a
+        sibling's registered page does not. Raises ``CacheExhausted``
+        (side-effect-free) when no slot or not enough pages."""
+        from repro.serve.paged import CacheExhausted
+        rid = payload["rid"]
+        if self.owns_request(rid):        # idempotent recovery replay
+            return
+        slot = next((s for s in range(self.SLOTS)
+                     if self.active[s] is None), None)
+        if slot is None:
+            raise CacheExhausted(
+                f"request {rid}: no free slot on migration target "
+                f"{self.tid}")
+        tokens = payload.get("tokens")
+        share = None
+        if tokens:
+            share = tokens[:self.PAGE * (len(tokens) // self.PAGE)] or None
+        pages = self.alloc.allocate(rid, payload["chain_len"],
+                                    tokens=share)
+        shared = self.alloc.shared_count(rid)
+        self.shared_hits += shared
+        cells = np.asarray(state["cells"], np.int64)
+        for i, p in enumerate(pages):
+            if i >= shared:
+                self.pages[p] = cells[i]
+        self.tables[slot, :] = 0
+        self.tables[slot, :len(pages)] = pages
+        self.pos[slot] = payload["pos"]
+        self.last[slot] = payload["last"]
+        self.active[slot] = payload["req"]
+        if share:
+            self.alloc.register_prefix(rid)
+        self.migrations_in += 1
+
+    def release_request(self, rid) -> bool:
+        """Commit side of an outbound migration: free our copy. Idempotent
+        (recovery may roll the same release forward twice)."""
+        slot = self._migrating.pop(rid, None)
+        if slot is None:
+            return False
+        self.alloc.free(rid)
+        self.active[slot] = None
+        self.tables[slot, :] = 0
+        self.pos[slot] = -1
+        self.migrations_out += 1
+        return True
+
+    def abort_migration(self, rid) -> bool:
+        """Thaw the frozen slot — the request never left (side-effect-free
+        on the request object)."""
+        return self._migrating.pop(rid, None) is not None
+
+    def abort_incoming(self, rid):
+        """Target-side rollback of a (possibly partial) admission."""
+        if rid not in self.alloc.owners():
+            return
+        for s, req in enumerate(self.active):
+            if req is not None and req.rid == rid:
+                self.active[s] = None
+                self.tables[s, :] = 0
+                self.pos[s] = -1
+                break
+        self.alloc.free(rid)
+
+    def owns_request(self, rid) -> bool:
+        if any(r is not None and r.rid == rid for r in self.active):
+            return True
+        if any(r.rid == rid for r in self.queue):
+            return True
+        return rid in self.alloc.owners()
 
     # ------------------------------------------------------------- protocol
     def bind(self, vf: VirtualFunction, state=None, *,
@@ -463,6 +579,7 @@ class SimServeTenant:
                 "workload": self.workload,
                 "queued": len(self.queue),
                 "inflight": sum(r is not None for r in self.active),
+                "migrating": sorted(self._migrating),
                 "exec_keys": [list(map(str, k)) for k in self._exec_cache]}
 
     def inject_failure(self):
