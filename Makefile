@@ -2,7 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast chaos chaos-fast bench bench-pause bench-sweep \
-	bench-chaos bench-serve bench-elastic bench-prefix bench-migration
+	bench-chaos bench-serve bench-elastic bench-prefix bench-migration \
+	bench-roofline
 
 test:            ## full tier-1 suite
 	$(PYTHON) -m pytest -x -q
@@ -17,7 +18,7 @@ chaos-fast:      ## PR-gate crash matrix subset
 	$(PYTHON) -m pytest -x -q -m chaos
 
 bench: bench-pause bench-sweep bench-chaos bench-serve bench-elastic \
-	bench-prefix bench-migration  ## regenerate BENCH_*.json
+	bench-prefix bench-migration bench-roofline  ## regenerate BENCH_*.json
 
 bench-pause:
 	$(PYTHON) benchmarks/pause_path.py --repeats 3 --out BENCH_pause_path.json
@@ -42,3 +43,6 @@ bench-prefix:    ## shared-prefix capacity ratio (CoW sharing vs copy-on-admit)
 
 bench-migration: ## request live migration (zero loss, stall, scale-in ITL)
 	$(PYTHON) benchmarks/migration.py --out BENCH_migration.json
+
+bench-roofline:  ## achieved-vs-peak bandwidth per decode kernel variant
+	$(PYTHON) benchmarks/decode_roofline.py --out BENCH_decode_roofline.json

@@ -1,0 +1,190 @@
+"""§Decode-roofline: achieved-vs-peak bandwidth for every decode kernel.
+
+Each row is ONE kernel variant from the serve plane's decode step, timed
+standalone at a serving-ish shape and reported through
+``runtime.roofline.kernel_roofline``: analytic FLOPs / bytes for the
+variant, measured wall time, and the achieved fractions against the
+peaks the run was told to use.
+
+  flash_decode     dense per-slot KV ring (the PR-2 layout)
+  paged_fp         block-table-indirected fp32 page pool
+  paged_int8       the same pool int8-quantized with per-(row,head) fp32
+                   scales — the analytic bytes drop ~2x (gated at <=0.6x)
+  fused_sample     temperature/top-k Gumbel sampling over (B, V) logits
+                   (kernels/sampling.py; logits never leave the device)
+  ssm_scan         the chunked SSD recurrent-path scan
+
+Peaks are config-injectable (``Peaks`` dataclass): by default this
+MEASURES the host's copy bandwidth / matmul FLOP rate
+(``measure_local_peaks``) so achieved_bw_frac is a fraction of what the
+backend the benchmark actually ran on can do — CPU CI numbers are not
+fractions of a TPU datasheet. ``--peak-bw-gbps`` / ``--peak-tflops``
+override both (e.g. pin real TPU v5e numbers on hardware).
+
+Gates (deterministic — analytic byte ratios and row presence, plus one
+generous wall-clock ratio; strict acceptance numbers live in the
+committed BENCH_decode_roofline.json):
+  * all five rows present with wall_s > 0
+  * paged_int8 analytic bytes <= 0.6x paged_fp analytic bytes
+  * paged_int8 wall <= 2.5x paged_fp wall (int8 must not give back the
+    byte savings in dequant overhead)
+"""
+import argparse
+import json
+import sys
+import time
+
+
+def timed_best(fn, reps=5):
+    fn()                                    # warm (compile)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench(reduced=False, reps=5, peaks=None):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels.ref import kv_quant_ref
+    from repro.runtime.roofline import (Peaks, kernel_roofline,
+                                        measure_local_peaks)
+
+    if peaks is None:
+        peaks = measure_local_peaks()
+
+    # serving-ish decode shapes (reduced on PRs: same rows, smaller walls)
+    B, H, K, hd = (8, 8, 4, 64) if reduced else (32, 8, 4, 64)
+    page, NP = 32, (4 if reduced else 16)   # NP*page logical tokens/seq
+    T = NP * page
+    V = 1024 if reduced else 4096
+    S, N = (64, 32) if reduced else (256, 64)
+    f32 = 4
+
+    ks = jax.random.split(jax.random.key(0), 8)
+    rows = []
+
+    def row(name, fn, flops, bytes_moved):
+        wall = timed_best(fn, reps=reps)
+        r = kernel_roofline(name, flops=flops, bytes_moved=bytes_moved,
+                            wall_s=wall, peaks=peaks)
+        rows.append(r)
+        print(json.dumps({k: (round(v, 6) if isinstance(v, float) else v)
+                          for k, v in r.items()}))
+        return r
+
+    # -- flash_decode: dense (B, T, K, hd) KV ring -------------------------
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, K, hd), jnp.float32)
+    attn_flops = 4.0 * B * H * T * hd       # qk^T + pv, 2 FLOP/MAC each
+    qo_bytes = 2.0 * B * H * hd * f32       # q read + o write
+    dense_bytes = 2.0 * B * T * K * hd * f32 + qo_bytes
+    row("flash_decode",
+        lambda: ops.flash_decode(q, k, v, T - 1).block_until_ready(),
+        attn_flops, dense_bytes)
+
+    # -- paged fp32: pool of B*NP pages + garbage page 0 -------------------
+    P = 1 + B * NP
+    kp = jax.random.normal(ks[3], (P, page, K, hd), jnp.float32)
+    vp = jax.random.normal(ks[4], (P, page, K, hd), jnp.float32)
+    tables = (1 + jnp.arange(B * NP, dtype=jnp.int32)).reshape(B, NP)
+    pos = jnp.full((B,), T - 1, jnp.int32)
+    paged_bytes = (2.0 * B * NP * page * K * hd * f32    # k+v pages read
+                   + B * NP * 4 + qo_bytes)              # tables + q/o
+    fp = row("paged_fp",
+             lambda: ops.paged_decode(q, kp, vp, tables, pos)
+             .block_until_ready(),
+             attn_flops, paged_bytes)
+
+    # -- paged int8: same pool quantized, per-(row,head) fp32 scales -------
+    kq, ksc = kv_quant_ref(kp)
+    vq, vsc = kv_quant_ref(vp)
+    int8_bytes = (2.0 * B * NP * page * K * hd * 1       # int8 payload
+                  + 2.0 * B * NP * page * K * f32        # scales
+                  + B * NP * 4 + qo_bytes)
+    dequant_flops = 2.0 * B * T * K * hd * 2             # k and v scaling
+    q8 = row("paged_int8",
+             lambda: ops.paged_decode_quant(q, kq, vq, ksc, vsc, tables,
+                                            pos).block_until_ready(),
+             attn_flops + dequant_flops, int8_bytes)
+
+    # -- fused sampling: (B, V) logits -> (B,) tokens on device ------------
+    logits = jax.random.normal(ks[5], (B, V), jnp.float32)
+    temp = jnp.where(jnp.arange(B) % 2 == 0, 0.0, 0.8).astype(jnp.float32)
+    topk = jnp.where(jnp.arange(B) % 2 == 0, 0, 40).astype(jnp.int32)
+    keys = jnp.stack([jnp.full((B,), 7, jnp.int32),
+                      jnp.arange(B, dtype=jnp.int32),
+                      jnp.zeros((B,), jnp.int32)], axis=1)
+    row("fused_sample",
+        lambda: ops.fused_sample(logits, temp, topk, keys,
+                                 vocab_size=V).block_until_ready(),
+        12.0 * B * V,                       # mask+scale+gumbel+argmax
+        B * V * f32 + B * 4)
+
+    # -- ssm_scan: the recurrent path's chunked SSD scan -------------------
+    xdt = jax.random.normal(ks[6], (B, S, H, hd), jnp.float32)
+    Bv = jax.random.normal(ks[7], (B, S, N), jnp.float32)
+    Cv = jax.random.normal(ks[0], (B, S, N), jnp.float32)
+    la = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    ssm_bytes = (2.0 * B * S * H * hd * f32              # xdt read, y write
+                 + 2.0 * B * S * N * f32 + B * S * H * f32)
+    row("ssm_scan",
+        lambda: ops.ssm_scan(xdt, Bv, Cv, la)[0].block_until_ready(),
+        6.0 * B * S * H * hd * N, ssm_bytes)
+
+    names = {r["name"] for r in rows}
+    summary = {
+        "name": "summary", "reduced": reduced,
+        "int8_bytes_vs_fp": round(q8["bytes"] / fp["bytes"], 4),
+        "int8_bytes_target": 0.6,
+        "int8_wall_vs_fp": round(q8["wall_s"] / fp["wall_s"], 3),
+        "int8_wall_target": 2.5,
+        "rows_present": len(names),
+        **peaks.row(),
+    }
+    rows.append(summary)
+    print(json.dumps(summary))
+    ok = (names == {"flash_decode", "paged_fp", "paged_int8",
+                    "fused_sample", "ssm_scan"}
+          and all(r["wall_s"] > 0 for r in rows[:-1])
+          and summary["int8_bytes_vs_fp"] <= 0.6
+          and summary["int8_wall_vs_fp"] <= 2.5)
+    return rows, ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smaller shapes (PR CI); same rows and gates")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--peak-bw-gbps", type=float, default=None,
+                    help="override the measured copy bandwidth peak")
+    ap.add_argument("--peak-tflops", type=float, default=None,
+                    help="override the measured matmul FLOP-rate peak")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    peaks = None
+    if args.peak_bw_gbps or args.peak_tflops:
+        from repro.runtime.roofline import Peaks, measure_local_peaks
+        m = measure_local_peaks()
+        peaks = Peaks(
+            flops=(args.peak_tflops * 1e12 if args.peak_tflops
+                   else m.flops),
+            hbm_bw=(args.peak_bw_gbps * 1e9 if args.peak_bw_gbps
+                    else m.hbm_bw))
+
+    rows, ok = bench(reduced=args.reduced, reps=args.reps, peaks=peaks)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

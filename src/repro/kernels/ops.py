@@ -17,6 +17,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import flash_decode as _fd
 from repro.kernels import paged_decode as _pd
 from repro.kernels import qdma_pack as _qp
+from repro.kernels import sampling as _sp
 from repro.kernels import ssm_scan as _ss
 
 
@@ -53,6 +54,36 @@ def paged_decode(q, k_pages, v_pages, tables, pos, *,
                              and not interpret):
         return _ref.paged_decode_ref(q, k_pages, v_pages, tables, pos)
     return _pd.paged_decode(q, k_pages, v_pages, tables, pos,
+                            interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "backend"))
+def paged_decode_quant(q, k_pages, v_pages, k_scale, v_scale, tables, pos, *,
+                       interpret: bool = False, backend: str = "auto"):
+    """paged_decode over an int8 page pool with per-(row,head) scales —
+    half the HBM bytes per decoded token, dequantized in-tile."""
+    if backend == "ref" or (backend == "auto" and not _on_tpu()
+                             and not interpret):
+        return _ref.paged_decode_quant_ref(q, k_pages, v_pages,
+                                           k_scale, v_scale, tables, pos)
+    return _pd.paged_decode_quant(q, k_pages, v_pages, k_scale, v_scale,
+                                  tables, pos,
+                                  interpret=interpret or not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size", "interpret",
+                                             "backend"))
+def fused_sample(logits, temp, top_k, keys, *, vocab_size: int,
+                 interpret: bool = False, backend: str = "auto"):
+    """In-kernel temperature/top-k Gumbel sampling: (B, Vp) logits ->
+    (B,) int32 token ids, bit-identical to ServeEngine._sample (the
+    host oracle) row by row. keys: (B, 3) int32 (seed, rid, counter)."""
+    if backend == "ref" or (backend == "auto" and not _on_tpu()
+                             and not interpret):
+        return _ref.fused_sample_ref(logits, temp, top_k, keys,
+                                     vocab_size=vocab_size)
+    return _sp.fused_sample(logits, temp, top_k, keys,
+                            vocab_size=vocab_size,
                             interpret=interpret or not _on_tpu())
 
 

@@ -78,6 +78,51 @@ def paged_decode_ref(q, k_pages, v_pages, tables, pos):
 
 
 # ---------------------------------------------------------------------------
+# int8 paged KV (per-row/head symmetric scales — see serve/paged.py)
+# ---------------------------------------------------------------------------
+def kv_quant_ref(x):
+    """Symmetric int8 quantization of a KV tensor over its last (hd) axis.
+    x: (..., hd) float -> (q int8 same shape, scale fp32 shape[:-1]).
+    scale = max|x| / 127 per (page-row, head), so a later dequant-requant
+    round-trip is exact (q_max lands on 127 by construction)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def kv_dequant_ref(q, scale, dtype=jnp.float32):
+    """Inverse of kv_quant_ref: (..., hd) int8 x (...) fp32 -> float."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def paged_decode_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                           tables, pos):
+    """paged_decode_ref over an int8 page pool: k/v_pages (P,page,K,hd)
+    int8 with per-(row,head) scales (P,page,K) fp32, dequantized before
+    the fp32 attention math."""
+    k = kv_dequant_ref(k_pages, k_scale)
+    v = kv_dequant_ref(v_pages, v_scale)
+    return paged_decode_ref(q, k, v, tables, pos)
+
+
+# ---------------------------------------------------------------------------
+# fused_sample (in-kernel temperature/top-k Gumbel sampling)
+# ---------------------------------------------------------------------------
+def fused_sample_ref(logits, temp, top_k, keys, *, vocab_size: int):
+    """jnp oracle for kernels/sampling.fused_sample: same prepare_rows
+    front half, same portable counter-hash Gumbel noise, plain argmax.
+    Bit-identical to both the Pallas kernel and ServeEngine._sample."""
+    from repro.kernels.sampling import jnp_gumbel, prepare_rows
+    z, noisy = prepare_rows(logits, temp, top_k, vocab_size=vocab_size)
+    idx = jnp.arange(z.shape[1], dtype=jnp.uint32)
+    g = jnp_gumbel(jnp.asarray(keys, jnp.int32)[:, None, :], idx[None, :])
+    y = jnp.where(noisy[:, None], z + g, z)
+    return jnp.argmax(y, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # ssm_scan (chunked scalar-decay linear recurrence — see models/ssm.py)
 # ---------------------------------------------------------------------------
 def ssm_scan_ref(xdt, Bv, Cv, log_a, chunk: int = 128):

@@ -80,13 +80,23 @@ def decode_attention(q, k_cache, v_cache, pos, *, backend: str = "reference",
 
 
 def paged_decode_attention(q, k_pages, v_pages, tables, pos, *,
+                           k_scale=None, v_scale=None,
                            backend: str = "reference",
                            interpret: bool = False) -> jax.Array:
     """Single-token decode over the paged KV pool. q: (B,1,H,hd);
     k_pages/v_pages: (P,page,K,hd); tables: (B,NP) int32 page ids; pos:
     (B,) int32 last valid logical index (attend <= pos; < 0 = inactive
-    slot, output row exactly zero)."""
+    slot, output row exactly zero). With ``k_scale``/``v_scale``
+    ((P,page,K) fp32) the pools are int8 and the quantized kernel
+    dequantizes in-tile."""
     from repro.kernels import ops as kops
+    if k_scale is not None:
+        if backend == "pallas":
+            return kops.paged_decode_quant(q, k_pages, v_pages, k_scale,
+                                           v_scale, tables, pos,
+                                           interpret=interpret)
+        return kops.paged_decode_quant(q, k_pages, v_pages, k_scale,
+                                       v_scale, tables, pos, backend="ref")
     if backend == "pallas":
         return kops.paged_decode(q, k_pages, v_pages, tables, pos,
                                  interpret=interpret)

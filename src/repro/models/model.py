@@ -70,11 +70,29 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, cdt, mode, cache, positions,
         offs = posw % page
         if active is not None:
             pids = jnp.where(active, pids, 0)
-        kc = cache["k"].at[pids, offs].set(k[:, 0].astype(cache["k"].dtype))
-        vc = cache["v"].at[pids, offs].set(v[:, 0].astype(cache["v"].dtype))
-        o = paged_decode_attention(q, kc, vc, tables, posa, backend=backend,
-                                   interpret=interpret)
-        new_cache = {"k": kc, "v": vc}
+        if "k_scale" in cache:
+            # int8 pool (kv_dtype='int8'): quantize the new token's row
+            # on write — per-(slot,head) symmetric scale over hd — and
+            # land scale + int8 payload at the same (page, offset)
+            from repro.serve.paged import kv_quantize
+            kq, ks = kv_quantize(k[:, 0])
+            vq, vs = kv_quantize(v[:, 0])
+            kc = cache["k"].at[pids, offs].set(kq)
+            vc = cache["v"].at[pids, offs].set(vq)
+            ksc = cache["k_scale"].at[pids, offs].set(ks)
+            vsc = cache["v_scale"].at[pids, offs].set(vs)
+            o = paged_decode_attention(q, kc, vc, tables, posa,
+                                       k_scale=ksc, v_scale=vsc,
+                                       backend=backend, interpret=interpret)
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+        else:
+            kc = cache["k"].at[pids, offs].set(
+                k[:, 0].astype(cache["k"].dtype))
+            vc = cache["v"].at[pids, offs].set(
+                v[:, 0].astype(cache["v"].dtype))
+            o = paged_decode_attention(q, kc, vc, tables, posa,
+                                       backend=backend, interpret=interpret)
+            new_cache = {"k": kc, "v": vc}
     elif mode == "decode":
         posa = jnp.asarray(pos)
         if posa.ndim == 0:       # uniform position: dynamic_update_slice

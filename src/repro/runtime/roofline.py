@@ -20,10 +20,30 @@ from dataclasses import dataclass, field
 
 from repro.runtime.hlo import CollectiveStats
 
-# TPU v5e constants (per chip) — task-specified
-PEAK_FLOPS_BF16 = 197e12          # FLOP/s
-HBM_BW = 819e9                    # B/s
-ICI_BW = 50e9                     # B/s per link
+
+@dataclass(frozen=True)
+class Peaks:
+    """Injectable peak-rate constants. The defaults are TPU v5e per-chip
+    numbers (the repo's target hardware), but benchmarks and CI gates
+    pass their own — a gate on 'fraction of peak' must pin WHICH peak it
+    measured against, or the number silently drifts across backends.
+    ``row()``/achieved-fraction reports carry the peaks used."""
+    flops: float = 197e12         # FLOP/s (bf16)
+    hbm_bw: float = 819e9         # B/s
+    ici_bw: float = 50e9          # B/s per link
+
+    def row(self) -> dict:
+        return {"peak_flops": self.flops, "peak_hbm_bw": self.hbm_bw,
+                "peak_ici_bw": self.ici_bw}
+
+
+DEFAULT_PEAKS = Peaks()
+
+# module-level aliases kept for existing callers — canonical values live
+# in Peaks so they can be overridden per Roofline / per benchmark
+PEAK_FLOPS_BF16 = DEFAULT_PEAKS.flops
+HBM_BW = DEFAULT_PEAKS.hbm_bw
+ICI_BW = DEFAULT_PEAKS.ici_bw
 
 _AR_FACTOR = 2.0                  # all-reduce = RS + AG
 
@@ -39,23 +59,25 @@ class Roofline:
     collective_bytes: float       # per device
     collective_detail: dict = field(default_factory=dict)
     model_flops: float = 0.0      # 6*N*D (global, fwd+bwd) or serve analogue
+    peaks: Peaks = DEFAULT_PEAKS
 
     @property
     def compute_s(self) -> float:
-        return self.hlo_flops / PEAK_FLOPS_BF16
+        return self.hlo_flops / self.peaks.flops
 
     @property
     def memory_s(self) -> float:
-        return self.hlo_bytes / HBM_BW
+        return self.hlo_bytes / self.peaks.hbm_bw
 
     @property
     def collective_s(self) -> float:
         by = self.collective_detail.get("bytes_by_op", {})
         t = 0.0
         for op, b in by.items():
-            t += b * (_AR_FACTOR if op == "all-reduce" else 1.0) / ICI_BW
+            t += (b * (_AR_FACTOR if op == "all-reduce" else 1.0)
+                  / self.peaks.ici_bw)
         if not by:
-            t = self.collective_bytes / ICI_BW
+            t = self.collective_bytes / self.peaks.ici_bw
         return t
 
     @property
@@ -79,7 +101,7 @@ class Roofline:
     @property
     def mfu(self) -> float:
         """Model FLOPs utilization at the roofline step time."""
-        denom = self.step_s * self.chips * PEAK_FLOPS_BF16
+        denom = self.step_s * self.chips * self.peaks.flops
         return self.model_flops / denom if denom else 0.0
 
     def row(self) -> dict:
@@ -94,7 +116,69 @@ class Roofline:
             "step_s": self.step_s, "model_flops": self.model_flops,
             "useful_flops_frac": self.useful_flops_frac, "mfu": self.mfu,
             "collective_detail": self.collective_detail,
+            **self.peaks.row(),
         }
+
+
+def kernel_roofline(name: str, flops: float, bytes_moved: float,
+                    wall_s: float, peaks: Peaks = DEFAULT_PEAKS) -> dict:
+    """Achieved-vs-peak report for ONE kernel invocation (the decode-
+    roofline benchmark's row shape): analytic FLOPs/bytes for the kernel,
+    measured wall time, and the achieved fractions against ``peaks``.
+    ``bound`` is the analytic bottleneck; ``achieved_*_frac`` is what the
+    measurement actually hit — the gap between them is the kernel's
+    headroom (or the host's interpret-mode overhead)."""
+    compute_s = flops / peaks.flops if peaks.flops else 0.0
+    memory_s = bytes_moved / peaks.hbm_bw if peaks.hbm_bw else 0.0
+    ideal_s = max(compute_s, memory_s)
+    return {
+        "name": name,
+        "flops": flops,
+        "bytes": bytes_moved,
+        "wall_s": wall_s,
+        "ideal_s": ideal_s,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+        "achieved_flops_per_s": flops / wall_s if wall_s else 0.0,
+        "achieved_bw": bytes_moved / wall_s if wall_s else 0.0,
+        "achieved_bw_frac": (bytes_moved / wall_s / peaks.hbm_bw
+                             if wall_s and peaks.hbm_bw else 0.0),
+        "peak_frac": ideal_s / wall_s if wall_s else 0.0,
+        **peaks.row(),
+    }
+
+
+def measure_local_peaks(copy_mb: float = 64.0, reps: int = 3) -> Peaks:
+    """Measure THIS host's achievable rates — jitted elementwise-copy
+    bandwidth and a square-matmul FLOP rate — and return them as a
+    ``Peaks``. CPU CI reports achieved-vs-peak fractions against the
+    backend the benchmark actually ran on, not TPU datasheet numbers;
+    ``ici_bw`` keeps the default (no local collective to measure)."""
+    import jax
+    import jax.numpy as jnp
+
+    n = max(1, int(copy_mb * 1e6 / 4))
+    x = jnp.arange(n, dtype=jnp.float32)
+    copy = jax.jit(lambda a: a + 1.0)
+    copy(x).block_until_ready()
+    best = min(_timed(lambda: copy(x).block_until_ready())
+               for _ in range(reps))
+    bw = 2.0 * n * 4 / best                      # one read + one write
+
+    m = 512
+    a = jnp.ones((m, m), jnp.float32)
+    mm = jax.jit(lambda u: u @ u)
+    mm(a).block_until_ready()
+    best = min(_timed(lambda: mm(a).block_until_ready())
+               for _ in range(reps))
+    fl = 2.0 * m ** 3 / best
+    return Peaks(flops=fl, hbm_bw=bw, ici_bw=DEFAULT_PEAKS.ici_bw)
+
+
+def _timed(fn) -> float:
+    import time
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def model_flops_estimate(model_cfg, shape_cfg) -> float:

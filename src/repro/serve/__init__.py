@@ -4,9 +4,11 @@ telemetry bus feeding the elastic autoscaler (``core.autoscaler``)."""
 from repro.serve.engine import DrainResult, Request, ServeEngine
 from repro.serve.fleet import EngineTenant, ServeFleet
 from repro.serve.paged import (BlockAllocator, CacheExhausted,
-                               DoubleFreeError, RequestRejected)
+                               DoubleFreeError, RequestRejected,
+                               UnknownRequestError)
 from repro.serve.telemetry import MetricsBus, percentile
 
 __all__ = ["BlockAllocator", "CacheExhausted", "DoubleFreeError",
            "DrainResult", "EngineTenant", "MetricsBus", "Request",
-           "RequestRejected", "ServeEngine", "ServeFleet", "percentile"]
+           "RequestRejected", "ServeEngine", "ServeFleet",
+           "UnknownRequestError", "percentile"]

@@ -53,7 +53,7 @@ class Request:
     prompt: np.ndarray                 # (len,) int32
     max_new_tokens: int = 16
     eos_id: int = -1                   # -1: never stops early
-    temperature: float = 0.0           # 0: greedy argmax
+    temperature: float = 0.0           # 0: greedy argmax (<= 0 likewise)
     top_k: int = 0                     # 0: no top-k filter
     seed: int = 0                      # sampling stream (with rid)
     out: list = dataclasses.field(default_factory=list)
@@ -61,6 +61,18 @@ class Request:
     error: Optional[str] = None        # set when admission rejected it
     t_submit: float = 0.0              # set by ServeEngine.submit
     t_tok: list = dataclasses.field(default_factory=list)  # per-token wall
+
+    def __post_init__(self):
+        # a positive-but-denormal temperature is always a caller bug: it
+        # asks for near-greedy noise but 1/T overflows the f32 logits to
+        # inf. The old sampler hid this with a silent max(T, 1e-6) clamp
+        # that changed the requested distribution — reject it loudly at
+        # construction instead (temperature <= 0 stays the greedy switch)
+        if 0 < self.temperature < 1e-6:
+            raise ValueError(
+                f"request {self.rid}: temperature {self.temperature} is "
+                "positive but below 1e-6; use 0 for greedy or a "
+                "temperature >= 1e-6")
 
 
 class DrainResult(list):
@@ -92,7 +104,9 @@ class ServeEngine:
     def __init__(self, run: RunConfig, params, *, slots: int = 4,
                  max_len: int = 256, rules=None, paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefill_chunk: int = 0, share_prefix: bool = False):
+                 prefill_chunk: int = 0, share_prefix: bool = False,
+                 kv_dtype: Optional[str] = None,
+                 fused_sampling: bool = False):
         self.run = run
         self.model = build_model(run)
         self.params = params
@@ -123,6 +137,15 @@ class ServeEngine:
 
         cfg = run.model
         self.paged = paged
+        if kv_dtype is not None and not paged:
+            raise ValueError("kv_dtype requires the paged cache layout")
+        self.kv_dtype = kv_dtype
+        #: fused sampling: temperature/top-k Gumbel sampling runs inside
+        #: the jitted decode step (kernels/sampling) and only token ids
+        #: come back to the host — bit-identical to the host ``_sample``
+        #: path (both draw the same portable counter-hash noise), so I10
+        #: holds across the knob
+        self.fused_sampling = bool(fused_sampling)
         if paged:
             ok, why = paged_cache_supported(cfg)
             if not ok:
@@ -151,7 +174,8 @@ class ServeEngine:
                                       make_serve_steps)
         prefill, _ = make_serve_steps(run, rules)
         self._prefill = jax.jit(prefill)
-        self._decode = jax.jit(make_decode_step(run, rules, paged=paged))
+        self._decode = jax.jit(make_decode_step(
+            run, rules, paged=paged, fused=self.fused_sampling))
         self._chunk = jax.jit(make_prefill_chunk(run, rules))
         self._cache = None                              # lazy batched cache
 
@@ -163,7 +187,8 @@ class ServeEngine:
             if self.paged:
                 self._cache = init_paged_cache(self.model, shape,
                                                self.num_pages,
-                                               self.page_size)
+                                               self.page_size,
+                                               kv_dtype=self.kv_dtype)
             else:
                 self._cache = self.model.init_cache(shape)
 
@@ -374,25 +399,35 @@ class ServeEngine:
 
     # -- sampling -------------------------------------------------------------
     def _sample(self, req: Request, logits_row: np.ndarray) -> int:
-        lg = np.asarray(logits_row, np.float64)
+        """THE sampling oracle (invariant I10): every other path —
+        pause/migrate replay, preemption-by-recompute, and the fused
+        in-kernel sampler (``kernels/sampling``) — must reproduce this
+        bit-for-bit. All arithmetic is float32 with portably-exact ops:
+        cast, divide, selection (partition), and the shared counter-hash
+        Gumbel noise, so host numpy and the device kernel agree on every
+        bit. Counter-seeded: token t of request (seed, rid) always draws
+        the same noise, so sampling is a pure function of the request."""
+        lg = np.asarray(logits_row, np.float32)
         V = self.run.model.vocab_size
         if lg.size > V:
             lg = lg.copy()
             lg[V:] = -np.inf                 # padded vocab tail
         if req.temperature <= 0:
             return int(np.argmax(lg))
-        lg = lg / max(req.temperature, 1e-6)
+        z = lg / np.float32(req.temperature)
         if 0 < req.top_k < V:
-            kth = np.partition(lg, -req.top_k)[-req.top_k]
-            lg = np.where(lg >= kth, lg, -np.inf)
-        # counter-seeded: token t of request (seed, rid) always draws the
-        # same gumbel noise — sampling is pause/migrate-invariant (I10)
-        rng = np.random.default_rng([0x5E12, req.seed, req.rid,
-                                     len(req.out)])
-        return int(np.argmax(lg + rng.gumbel(size=lg.shape)))
+            kth = np.partition(z, -req.top_k)[-req.top_k]
+            z = np.where(z >= kth, z, -np.inf)
+        from repro.kernels.sampling import host_gumbel
+        return int(np.argmax(z + host_gumbel(req.seed, req.rid,
+                                             len(req.out), z.shape[0])))
 
     def _emit(self, req: Request, logits_row: np.ndarray) -> int:
-        tok = self._sample(req, logits_row)
+        return self._finish_token(req, self._sample(req, logits_row))
+
+    def _finish_token(self, req: Request, tok: int) -> int:
+        """Record one sampled token (host- or kernel-sampled) and retire
+        the request on EOS / token budget."""
         req.out.append(tok)
         req.t_tok.append(time.perf_counter())
         if tok == req.eos_id or len(req.out) >= req.max_new_tokens:
@@ -443,21 +478,38 @@ class ServeEngine:
         pos_new = np.where(act_mask, self.pos + 1, -1).astype(np.int32)
         tokens = jnp.asarray(np.where(act_mask, self.last_token, 0),
                              jnp.int32)[:, None]
+        args = [self.params, self._cache, tokens, jnp.asarray(pos_new)]
         if self.paged:
             W = self._table_width(pos_new)
-            logits, self._cache = self._decode(
-                self.params, self._cache, tokens, jnp.asarray(pos_new),
-                jnp.asarray(self.tables[:, :W]), jnp.asarray(act_mask))
+            args.append(jnp.asarray(self.tables[:, :W]))
+        args.append(jnp.asarray(act_mask))
+        if self.fused_sampling:
+            # per-slot sampling params ride into the jitted step; only
+            # (slots,) int32 token ids come back — the (B, V) logits
+            # never leave the device
+            temp = np.zeros((self.slots,), np.float32)
+            topk = np.zeros((self.slots,), np.int32)
+            keys = np.zeros((self.slots, 3), np.int32)
+            for s in act:
+                req = self.active[s]
+                temp[s] = np.float32(req.temperature)
+                topk[s] = req.top_k
+                keys[s] = (req.seed, req.rid, len(req.out))
+            toks, self._cache = self._decode(
+                *args, jnp.asarray(temp), jnp.asarray(topk),
+                jnp.asarray(keys))
+            sampled = np.asarray(toks)
         else:
-            logits, self._cache = self._decode(
-                self.params, self._cache, tokens, jnp.asarray(pos_new),
-                jnp.asarray(act_mask))
+            logits, self._cache = self._decode(*args)
+            lg = np.asarray(logits)
         self._dirty |= {"cache", "pos", "last_token"}
-        lg = np.asarray(logits)
         for s in act:
             req = self.active[s]
             self.pos[s] += 1
-            tok = self._emit(req, lg[s])
+            if self.fused_sampling:
+                tok = self._finish_token(req, int(sampled[s]))
+            else:
+                tok = self._emit(req, lg[s])
             self.last_token[s] = tok
             if not req.done and self.pos[s] + 1 >= self.max_len:
                 req.done = True

@@ -205,6 +205,8 @@ class ServeFleet:
                  slots: int = 4, max_len: int = 256, paged: bool = True,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: int = 0, share_prefix: bool = False,
+                 kv_dtype: Optional[str] = None,
+                 fused_sampling: bool = False,
                  slo_max_load: int = 64,
                  workdir: str = "/tmp/svff_fleet", devices=None,
                  autoscale: Optional[AutoscaleConfig] = None,
@@ -226,7 +228,9 @@ class ServeFleet:
         self._engine_kw = dict(slots=slots, max_len=max_len, paged=paged,
                                page_size=page_size, num_pages=num_pages,
                                prefill_chunk=prefill_chunk,
-                               share_prefix=share_prefix)
+                               share_prefix=share_prefix,
+                               kv_dtype=kv_dtype,
+                               fused_sampling=fused_sampling)
         # pre-carving MORE VFs than engines (``num_vfs``) gives scale-out
         # a pause-free path: attaching to an existing detached VF never
         # interrupts the running engines, whereas growing the partition

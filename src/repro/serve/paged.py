@@ -39,6 +39,7 @@ indirection, cost proportional to pages actually written).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional
 
@@ -66,12 +67,29 @@ class DoubleFreeError(RuntimeError):
     requests, so this is a loud typed error, never a no-op."""
 
 
+class UnknownRequestError(RuntimeError):
+    """``extend``/``cow`` of a rid that holds no pages. The engine's lazy
+    decode growth and CoW splits only ever name requests it placed, so an
+    unknown rid here is a control-plane bug (stale slot map, migration
+    race) — a loud typed error, never a silent KeyError/ValueError that
+    callers can't distinguish from a malformed argument."""
+
+
 def _is_kv(path) -> bool:
     """Attention-cache leaves that need no slot reset (self-attn KV is
     masked by pos; cross xk/xv only ever appear in DENSE caches — the
     paged layout gates out encoder-decoder stacks entirely)."""
     name = path[-1].key if hasattr(path[-1], "key") else ""
     return name in ("k", "v", "xk", "xv")
+
+
+def _is_kv_scale(path) -> bool:
+    """Per-page quantization-scale siblings of int8 KV pools
+    ((nper, P, page, K) fp32 next to (nper, P, page, K, hd) int8) — they
+    move with their pages (CoW copies, defragment gathers) but are
+    neither scattered from the fp request cache nor slot-reset."""
+    name = path[-1].key if hasattr(path[-1], "key") else ""
+    return name in ("k_scale", "v_scale", "xk_scale", "xv_scale")
 
 
 class BlockAllocator:
@@ -235,9 +253,11 @@ class BlockAllocator:
 
     def extend(self, rid: int, n: int = 1) -> list[int]:
         """Lazy decode growth: append ``n`` fresh (private) pages to
-        rid's chain. Decode-grown pages are never offered for sharing."""
+        rid's chain. Decode-grown pages are never offered for sharing.
+        Unknown rid is an ``UnknownRequestError`` — see the class."""
         if rid not in self._owned:
-            raise ValueError(f"request {rid} holds no pages")
+            raise UnknownRequestError(
+                f"extend of request {rid}, which holds no pages")
         if n > len(self._free):
             raise CacheExhausted(
                 f"request {rid} needs {n} more pages, only "
@@ -261,6 +281,9 @@ class BlockAllocator:
         ``idx`` with a fresh private one (caller device-copies the bytes
         via ``copy_page`` and repoints its own table row). Returns
         ``(old_page, new_page)``."""
+        if rid not in self._owned:
+            raise UnknownRequestError(
+                f"cow of request {rid}, which holds no pages")
         chain = self._owned[rid]
         old = chain[idx]
         if self._ref[old] <= 1:
@@ -396,13 +419,39 @@ def paged_cache_supported(cfg) -> tuple[bool, str]:
     return True, ""
 
 
-def init_paged_cache(model, shape, num_pages: int, page_size: int) -> dict:
+def kv_quantize(x):
+    """Symmetric int8 quantization of KV rows over the trailing hd axis:
+    scale = max|x| / 127 per (..., head) row, q = round(x / scale). The
+    max always lands on q = +-127, so dequant -> requant round-trips
+    bit-exactly — migration may ship dequantized fp rows and the target
+    re-admits them to the identical int8 bytes (I13 stays exact)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def kv_dequantize(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_paged_cache(model, shape, num_pages: int, page_size: int,
+                     kv_dtype: Optional[str] = None) -> dict:
     """Build the serve cache tree: attention k/v leaves become shared page
     pools (nper, P, page, K, hd); every other leaf (recurrent state) stays
-    dense per-slot (B, ...) exactly as ``init_cache`` makes it."""
+    dense per-slot (B, ...) exactly as ``init_cache`` makes it.
+
+    ``kv_dtype='int8'`` stores the pools quantized (per-(row,head)
+    symmetric scales in fp32 ``k_scale``/``v_scale`` siblings, shape
+    (nper, P, page, K)) — page bytes drop ~2x (int8 payload + one fp32
+    scale per hd-row vs fp32 payload), so resident requests per pool
+    roughly double on top of the prefix-sharing multiplier."""
     ok, why = paged_cache_supported(model.cfg)
     if not ok:
         raise ValueError(f"paged KV unsupported for {model.cfg.name}: {why}")
+    if kv_dtype not in (None, "int8"):
+        raise ValueError(f"unsupported kv_dtype {kv_dtype!r} "
+                         "(None or 'int8')")
     # the dense template only sizes non-KV leaves, so keep its seq dim tiny
     base = model.init_cache(dataclasses.replace(shape, seq_len=1))
 
@@ -412,7 +461,33 @@ def init_paged_cache(model, shape, num_pages: int, page_size: int) -> dict:
             return jnp.zeros((nper, num_pages, page_size, K, hd),
                              leaf.dtype)
         return leaf
-    return jax.tree_util.tree_map_with_path(one, base)
+    tree = jax.tree_util.tree_map_with_path(one, base)
+    if kv_dtype == "int8":
+        tree = _quantize_tree(tree)
+    return tree
+
+
+def _quantize_tree(node):
+    """Recursively convert fp KV page pools to int8 + scale siblings.
+    The cache tree is plain nested dicts (see Model.cache_specs)."""
+    if not isinstance(node, dict):
+        return node
+    out = {}
+    for name, child in node.items():
+        if isinstance(child, dict):
+            out[name] = _quantize_tree(child)
+        elif name in ("k", "v", "xk", "xv") and child.ndim == 5:
+            nper, P, page, K, hd = child.shape
+            out[name] = jnp.zeros((nper, P, page, K, hd), jnp.int8)
+            out[name + "_scale"] = jnp.zeros((nper, P, page, K),
+                                             jnp.float32)
+        else:
+            out[name] = child
+    return out
+
+
+def _path_key(path) -> tuple:
+    return tuple(getattr(p, "key", getattr(p, "idx", None)) for p in path)
 
 
 def admit_kv(cache: dict, req_cache: dict, page_ids, page_size: int,
@@ -422,25 +497,63 @@ def admit_kv(cache: dict, req_cache: dict, page_ids, page_size: int,
     written into batch ``slot`` densely. ``skip_pages`` leading pages of
     the chain are trie-shared and already hold the right rows — writing
     them here would zero-pad over a sibling's live rows, so they are
-    excluded from the scatter."""
+    excluded from the scatter.
+
+    The pool may be int8 (``kv_dtype='int8'``) while the request cache is
+    always the fp dense staging layout — quantization happens here, and
+    the scale siblings are filled from the same rows. The two trees then
+    have different structures, so this walks the pool's flattened paths
+    and looks the fp sources up by path.
+
+    The whole scatter is jit-compiled, keyed by (staging length, page
+    count, skip) — the same shape family the prefill executables already
+    warm — so an int8 admit costs one fused kernel, not an eager
+    quantize-dispatch per cache leaf. ``slot`` rides in as a traced
+    scalar: slot churn never retraces."""
     skip = int(skip_pages)
     ids = jnp.asarray(page_ids, jnp.int32)[skip:]
-    n = int(ids.shape[0])
+    return _admit_kv_jit(cache, req_cache, ids, jnp.int32(slot),
+                         page_size=int(page_size), skip=skip)
 
-    def one(path, pooled, req_leaf):
+
+@functools.partial(jax.jit, static_argnames=("page_size", "skip"))
+def _admit_kv_jit(cache: dict, req_cache: dict, ids, slot, *,
+                  page_size: int, skip: int) -> dict:
+    n = int(ids.shape[0])
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    req = {_path_key(p): leaf
+           for p, leaf in jax.tree_util.tree_flatten_with_path(req_cache)[0]}
+
+    def page_rows(req_leaf):
+        nper, _, L, K, hd = req_leaf.shape
+        r = req_leaf[:, 0, skip * page_size:]
+        pad = n * page_size - (L - skip * page_size)
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return r.reshape(nper, n, page_size, K, hd)
+
+    out = []
+    for path, pooled in flat:
+        key = _path_key(path)
         if _is_kv(path):
             if n == 0:                 # whole prompt shared: nothing to copy
-                return pooled
-            nper, _, L, K, hd = req_leaf.shape
-            r = req_leaf[:, 0, skip * page_size:]
-            pad = n * page_size - (L - skip * page_size)
-            r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            r = r.reshape(nper, n, page_size, K, hd)
-            return pooled.at[:, ids].set(r.astype(pooled.dtype))
-        return jax.lax.dynamic_update_slice(
-            pooled, req_leaf.astype(pooled.dtype),
-            (0, slot) + (0,) * (pooled.ndim - 2))
-    return jax.tree_util.tree_map_with_path(one, cache, req_cache)
+                out.append(pooled)
+                continue
+            r = page_rows(req[key])
+            if pooled.dtype == jnp.int8:
+                r, _ = kv_quantize(r)
+            out.append(pooled.at[:, ids].set(r.astype(pooled.dtype)))
+        elif _is_kv_scale(path):
+            if n == 0:
+                out.append(pooled)
+                continue
+            r = page_rows(req[key[:-1] + (key[-1][:-len("_scale")],)])
+            _, scale = kv_quantize(r)
+            out.append(pooled.at[:, ids].set(scale))
+        else:
+            out.append(jax.lax.dynamic_update_slice(
+                pooled, req[key].astype(pooled.dtype),
+                (0, slot) + (0,) * (pooled.ndim - 2)))
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def extract_kv(cache: dict, page_ids, page_size: int, slot: int) -> dict:
@@ -449,38 +562,57 @@ def extract_kv(cache: dict, page_ids, page_size: int, slot: int) -> dict:
     (nper, 1, n*page_size, K, hd) request tree, and slice its batch slot
     out of every dense (recurrent-state) leaf, keeping the slot axis.
     The result has exactly the shape ``admit_kv`` scatters, so target-
-    side admission IS ``admit_kv(..., skip_pages=n_reshared)``."""
+    side admission IS ``admit_kv(..., skip_pages=n_reshared)``.
+
+    int8 pools are DEQUANTIZED here and scale leaves dropped: a migration
+    payload is always the fp dense layout, so source and target engines
+    may run different ``kv_dtype`` settings — and since the quantizer's
+    row max lands exactly on +-127, a target re-admitting into int8
+    reproduces the source's bytes bit-for-bit."""
     ids = jnp.asarray(page_ids, jnp.int32)
     n = int(ids.shape[0])
 
-    def one(path, leaf):
-        if _is_kv(path):
-            nper, _, P, K, hd = leaf.shape
-            return leaf[:, ids].reshape(nper, 1, n * P, K, hd)
-        return jax.lax.dynamic_slice(
-            leaf, (0, slot) + (0,) * (leaf.ndim - 2),
-            (leaf.shape[0], 1) + leaf.shape[2:])
-    return jax.tree_util.tree_map_with_path(one, cache)
+    def walk(node):
+        out = {}
+        for name, child in node.items():
+            if isinstance(child, dict):
+                out[name] = walk(child)
+                continue
+            if name in ("k_scale", "v_scale", "xk_scale", "xv_scale"):
+                continue
+            if name in ("k", "v", "xk", "xv") and child.ndim == 5:
+                nper, _, P, K, hd = child.shape
+                rows = child[:, ids]
+                if child.dtype == jnp.int8:
+                    rows = kv_dequantize(rows, node[name + "_scale"][:, ids])
+                out[name] = rows.reshape(nper, 1, n * P, K, hd)
+            else:
+                out[name] = jax.lax.dynamic_slice(
+                    child, (0, slot) + (0,) * (child.ndim - 2),
+                    (child.shape[0], 1) + child.shape[2:])
+        return out
+    return walk(cache)
 
 
 def copy_page(cache: dict, src: int, dst: int) -> dict:
     """CoW page split, device side: duplicate one physical page across
-    every KV pool so the writer's fresh private page starts bit-identical
-    to the shared one it is leaving."""
+    every KV pool (and its quantization scales) so the writer's fresh
+    private page starts bit-identical to the shared one it is leaving."""
     def one(path, leaf):
-        if _is_kv(path):
+        if _is_kv(path) or _is_kv_scale(path):
             return leaf.at[:, dst].set(leaf[:, src])
         return leaf
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
 def apply_page_moves(cache: dict, moves: dict[int, int]) -> dict:
-    """Apply a ``defragment`` move map to the physical page pools."""
+    """Apply a ``defragment`` move map to the physical page pools
+    (quantization scales ride along — their axis 1 is the same page id)."""
     if not moves:
         return cache
 
     def one(path, leaf):
-        if _is_kv(path):
+        if _is_kv(path) or _is_kv_scale(path):
             g = permutation_of(moves, leaf.shape[1])
             return leaf[:, jnp.asarray(g)]
         return leaf
@@ -489,9 +621,10 @@ def apply_page_moves(cache: dict, moves: dict[int, int]) -> dict:
 
 def reset_slot_state(cache: dict, slot: int) -> dict:
     """Zero a finished slot's dense (non-KV) recurrent state; paged KV
-    needs no reset — its pages are simply returned to the allocator."""
+    (and its scales) needs no reset — its pages are simply returned to
+    the allocator."""
     def one(path, leaf):
-        if _is_kv(path):
+        if _is_kv(path) or _is_kv_scale(path):
             return leaf
         name = path[-1].key if hasattr(path[-1], "key") else ""
         fill = -1e30 if name == "m" else 0.0

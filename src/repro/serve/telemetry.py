@@ -10,15 +10,29 @@ per-token wall timestamps the engine already records on each ``Request``
 from __future__ import annotations
 
 import collections
+import math
 from typing import Iterable
 
 
 def percentile(xs, q: float) -> float:
-    """Nearest-rank percentile over an unsorted iterable (0 when empty)."""
+    """Nearest-rank percentile over an unsorted iterable (0 when empty).
+
+    Canonical nearest-rank: the smallest element with at least ``q`` of
+    the sample at or below it — 1-based rank ``ceil(q * n)``. The old
+    ``int(round(q * (n - 1)))`` compressed quantiles onto an (n-1) index
+    range and broke .5 ties with Python's banker's rounding (toward
+    EVEN), so the reported rank drifted off the definition by one
+    position with direction depending on window parity — e.g. p50 of a
+    4-sample window returned the 3rd smallest (rank 3, a ~62nd
+    percentile), not rank ceil(2) = 2. Small telemetry windows (fresh
+    engine, post-scale-out) are exactly where the autoscaler compares
+    these numbers against fixed thresholds, so the rank must be the
+    definitional one, not parity-dependent."""
     xs = sorted(xs)
-    if not xs:
+    n = len(xs)
+    if n == 0:
         return 0.0
-    i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
+    i = min(n - 1, max(0, math.ceil(q * n) - 1))
     return xs[i]
 
 

@@ -143,17 +143,48 @@ def make_serve_steps(run: RunConfig, rules: Optional[ShardingRules] = None):
 
 def make_decode_step(run: RunConfig,
                      rules: Optional[ShardingRules] = None, *,
-                     paged: bool = False):
+                     paged: bool = False, fused: bool = False):
     """Continuous-batching decode step with an active-slot mask; with
     ``paged`` the cache is the paged-KV page pool and a block table rides
-    along (see ``Model.decode_step``)."""
+    along (see ``Model.decode_step``).
+
+    With ``fused`` the step also takes per-slot sampling params
+    (temp (B,) f32, top_k (B,) i32, keys (B,3) i32 = (seed, rid,
+    token_counter)) and returns SAMPLED TOKEN IDS (B,) i32 instead of
+    logits — temperature/top-k Gumbel sampling runs on-device
+    (``kernels/sampling``), bit-identical to ``ServeEngine._sample``, and
+    the (B, V) logits never leave the device."""
     model = build_model(run)
 
-    if paged:
+    def _sample_on_device(logits, temp, topk, keys):
+        from repro.kernels import ops as kops
+        backend = run.kernel_backend
+        interpret = (backend == "pallas"
+                     and jax.default_backend() != "tpu")
+        return kops.fused_sample(
+            logits, temp, topk, keys, vocab_size=run.model.vocab_size,
+            interpret=interpret,
+            backend="auto" if backend == "pallas" else "ref")
+
+    if paged and fused:
+        def decode(params, cache, tokens, pos, tables, active,
+                   temp, topk, keys):
+            with sharding_scope(rules):
+                logits, cache = model.decode_step(params, cache, tokens,
+                                                  pos, tables=tables,
+                                                  active=active)
+                return _sample_on_device(logits, temp, topk, keys), cache
+    elif paged:
         def decode(params, cache, tokens, pos, tables, active):
             with sharding_scope(rules):
                 return model.decode_step(params, cache, tokens, pos,
                                          tables=tables, active=active)
+    elif fused:
+        def decode(params, cache, tokens, pos, active, temp, topk, keys):
+            with sharding_scope(rules):
+                logits, cache = model.decode_step(params, cache, tokens,
+                                                  pos, active=active)
+                return _sample_on_device(logits, temp, topk, keys), cache
     else:
         def decode(params, cache, tokens, pos, active):
             with sharding_scope(rules):

@@ -13,7 +13,8 @@ from repro.core import DevicePool, SVFFManager, StagingEngine
 from repro.models.model import build_model
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.paged import (BlockAllocator, CacheExhausted,
-                               DoubleFreeError, RequestRejected)
+                               DoubleFreeError, RequestRejected,
+                               UnknownRequestError)
 from repro.sim.invariants import InvariantViolation, check_invariants
 
 
@@ -165,7 +166,7 @@ def test_extend_grows_chain_with_private_pages():
     # decode-grown pages are never offered for sharing
     p1 = alloc.allocate(1, 2, tokens=prompt + (9, 9, 9, 9))
     assert new not in p1
-    with pytest.raises(ValueError):
+    with pytest.raises(UnknownRequestError):
         alloc.extend(42, 1)                # unknown rid
     with pytest.raises(CacheExhausted):
         alloc.extend(0, 99)
