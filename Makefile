@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast chaos chaos-fast bench bench-pause bench-sweep \
 	bench-chaos bench-serve bench-elastic bench-prefix bench-migration \
-	bench-roofline
+	bench-roofline bench-pipeline
 
 test:            ## full tier-1 suite
 	$(PYTHON) -m pytest -x -q
@@ -18,7 +18,8 @@ chaos-fast:      ## PR-gate crash matrix subset
 	$(PYTHON) -m pytest -x -q -m chaos
 
 bench: bench-pause bench-sweep bench-chaos bench-serve bench-elastic \
-	bench-prefix bench-migration bench-roofline  ## regenerate BENCH_*.json
+	bench-prefix bench-migration bench-roofline \
+	bench-pipeline  ## regenerate BENCH_*.json
 
 bench-pause:
 	$(PYTHON) benchmarks/pause_path.py --repeats 3 --out BENCH_pause_path.json
@@ -46,3 +47,6 @@ bench-migration: ## request live migration (zero loss, stall, scale-in ITL)
 
 bench-roofline:  ## achieved-vs-peak bandwidth per decode kernel variant
 	$(PYTHON) benchmarks/decode_roofline.py --out BENCH_decode_roofline.json
+
+bench-pipeline:  ## K-VF pipeline engines (bit-identity, bubble, reshape)
+	$(PYTHON) benchmarks/pipeline_serve.py --out BENCH_pipeline_serve.json

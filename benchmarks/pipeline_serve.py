@@ -1,0 +1,228 @@
+"""§Pipeline-serving: elastic K-VF pipeline engines — bit-identity at
+every registered width, measured schedule bubble vs the GPipe analytic,
+modeled tokens/s scaling with K, and the live-reshape stall.
+
+The claims under test (see EXPERIMENTS.md §Pipeline-serving):
+
+  1. bit-identity across K — ``PipelineServeEngine`` at every K in the
+     template registry emits EXACTLY the single-stage oracle's token
+     streams (the full-layout cache + forced unrolled-layer program make
+     the stage split a pure relayout, invariant I10);
+  2. measured bubble tracks the analytic — the per-(stage, microbatch)
+     wall times fed through ``schedule_stats`` give a measured bubble
+     fraction within ``BUBBLE_SLACK`` of ``bubble_fraction(M, K)``
+     (uniform-wall GPipe: (K-1)/(M+K-1));
+  3. tokens/s scales with K — per-stage walls on the smoke model are
+     overhead-dominated, so throughput is MODELED for the full
+     deepseek-67b layer stack (95 periods): with a balanced template,
+     concurrent stage execution serves M microbatches per
+     ``(M+K-1) * t_max_stage`` schedule round, a tokens/s ratio of
+     ``(P / max_periods_per_stage) * M / (M+K-1)`` over one VF — the
+     modeled column must increase strictly with K;
+  4. bounded reshape stall — a live ``apply_reshape`` is a template
+     re-selection over the SAME cache bytes: its wall time must be at
+     most ``RESHAPE_STALL_RATIO`` of a cold engine re-instantiation
+     (which re-jits every stage program), and the run it interrupts
+     stays token-identical to the oracle.
+
+Protocol: one oracle run (single-stage ``ServeEngine``, paged) over a
+fixed request set, then one ``PipelineServeEngine`` run per K on the
+SAME requests, then a live-reshape run that narrows K mid-decode.
+
+Acceptance gates (committed BENCH_pipeline_serve.json):
+  * token_identical at every K and across the live reshape;
+  * measured_bubble <= bubble_fraction(M, K) + BUBBLE_SLACK per K;
+  * modeled full-config tokens/s ratio strictly increasing in K;
+  * reshape_wall_s <= RESHAPE_STALL_RATIO * cold_restart_s.
+CI reruns a reduced trace on PRs with the same gates.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+BUBBLE_SLACK = 0.40          # measured vs analytic bubble, smoke walls
+RESHAPE_STALL_RATIO = 0.5    # live reshape vs cold re-instantiation
+
+
+def make_requests(vocab, n, max_new):
+    import numpy as np
+    from repro.serve import Request
+    prompts = [np.arange(6) % vocab, (np.arange(8) * 3) % vocab,
+               (np.arange(5) + 11) % vocab, (np.arange(7) * 7 + 2) % vocab]
+    return [Request(rid=i, prompt=np.asarray(prompts[i % 4], np.int32),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def drive(eng, reqs, hook=None, max_steps=400):
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while not all(r.done for r in reqs):
+        if hook:
+            hook(steps)
+        eng.step()
+        steps += 1
+        assert steps <= max_steps, "run did not converge"
+    return [list(r.out) for r in reqs]
+
+
+def modeled_scaling(num_periods, widths, microbatches):
+    """Full-config modeled tokens/s ratio over one VF per width: balanced
+    template, concurrent stages, per-period wall uniform."""
+    from repro.serve.stages import build_templates
+    tpls = build_templates(num_periods, max(widths))
+    rows = {}
+    for k in widths:
+        tpl = tpls[k]
+        longest = max(hi - lo for lo, hi in
+                      (tpl.stage_range(i) for i in range(k)))
+        rows[k] = round((num_periods / longest)
+                        * microbatches / (microbatches + k - 1), 3)
+    return rows
+
+
+def bench(n_reqs=3, max_new=6, microbatches=2, widths=(2, 3, 4), seed=0):
+    import jax
+    from repro.configs import make_run_config
+    from repro.models.model import build_model
+    from repro.runtime.pipeline import bubble_fraction
+    from repro.serve import ServeEngine
+    from repro.serve.pipeline_engine import PipelineServeEngine
+
+    run = make_run_config("deepseek-67b", "decode_32k", smoke=True)
+    # 4 periods so every width in 1..4 has a registered template; the
+    # forced unrolled-layer program must match the pipeline engine's
+    run = dataclasses.replace(
+        run,
+        model=dataclasses.replace(run.model, num_layers=4),
+        sharding=dataclasses.replace(run.sharding, scan_layers=False))
+    params = build_model(run).init(jax.random.key(seed))
+    vocab = run.model.vocab_size
+    full_periods = make_run_config("deepseek-67b", "decode_32k",
+                                   smoke=False).model.num_layers
+
+    rows = [{"name": "protocol", "model": "deepseek-67b (smoke, 4 layers)",
+             "requests": n_reqs, "max_new": max_new,
+             "microbatches": microbatches, "widths": list(widths),
+             "modeled_periods": full_periods,
+             "bubble_slack": BUBBLE_SLACK,
+             "reshape_stall_ratio": RESHAPE_STALL_RATIO}]
+    print(json.dumps(rows[0]))
+
+    t0 = time.perf_counter()
+    oracle = ServeEngine(run, params, slots=4, max_len=96, paged=True)
+    want = drive(oracle, make_requests(vocab, n_reqs, max_new))
+    oracle_row = {"name": "oracle_k1",
+                  "tokens": sum(len(o) for o in want),
+                  "wall_s": round(time.perf_counter() - t0, 3)}
+    rows.append(oracle_row)
+    print(json.dumps(oracle_row))
+
+    per_k = {}
+    for k in widths:
+        t0 = time.perf_counter()
+        eng = PipelineServeEngine(run, params, stages=k, slots=4,
+                                  max_len=96, microbatches=microbatches)
+        build_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        got = drive(eng, make_requests(vocab, n_reqs, max_new))
+        analytic = bubble_fraction(microbatches, k)
+        row = {"name": f"pipeline_k{k}", "stages": k,
+               "token_identical": got == want,
+               "sched_ticks": eng.sched_ticks,
+               "measured_bubble": round(eng.measured_bubble, 3),
+               "analytic_bubble": round(analytic, 3),
+               "bubble_within_slack":
+                   eng.measured_bubble <= analytic + BUBBLE_SLACK,
+               "stage_loads": [round(x, 3) for x in eng.stage_loads()],
+               "build_s": round(build_s, 3),
+               "wall_s": round(time.perf_counter() - t0, 3)}
+        per_k[k] = row
+        rows.append(row)
+        print(json.dumps(row))
+
+    # live reshape: narrow the widest engine mid-decode, then measure a
+    # cold re-instantiation at the target width for the stall comparison
+    k_hi, k_lo = max(widths), max(widths) - 1
+    eng = PipelineServeEngine(run, params, stages=k_hi, slots=4,
+                              max_len=96, microbatches=microbatches)
+    stall = {}
+
+    def narrow(step):
+        if step == 1:          # early: every trace length reaches it
+            t0 = time.perf_counter()
+            eng.apply_reshape(k_lo)
+            stall["reshape_wall_s"] = time.perf_counter() - t0
+
+    got = drive(eng, make_requests(vocab, n_reqs, max_new), hook=narrow)
+    t0 = time.perf_counter()
+    PipelineServeEngine(run, params, stages=k_lo, slots=4, max_len=96,
+                        microbatches=microbatches)
+    cold_s = time.perf_counter() - t0
+    reshape_row = {
+        "name": "live_reshape", "from_k": k_hi, "to_k": k_lo,
+        "token_identical": got == want,
+        "reshape_count": eng.reshape_count,
+        "reshape_wall_s": round(stall["reshape_wall_s"], 6),
+        "cold_restart_s": round(cold_s, 3),
+        "stall_ratio": round(stall["reshape_wall_s"] / cold_s, 6)}
+    rows.append(reshape_row)
+    print(json.dumps(reshape_row))
+
+    modeled = modeled_scaling(full_periods, (1,) + tuple(widths),
+                              max(microbatches, 4))
+    model_row = {"name": "modeled_full_config",
+                 "periods": full_periods,
+                 "microbatches": max(microbatches, 4),
+                 "tokens_per_s_ratio": {str(k): v
+                                        for k, v in modeled.items()}}
+    rows.append(model_row)
+    print(json.dumps(model_row))
+
+    ratios = [modeled[k] for k in sorted(modeled)]
+    summary = {
+        "name": "summary",
+        "token_identical_all_k": all(per_k[k]["token_identical"]
+                                     for k in widths),
+        "bubble_within_slack_all_k": all(per_k[k]["bubble_within_slack"]
+                                         for k in widths),
+        "modeled_scaling_monotonic": all(a < b for a, b in
+                                         zip(ratios, ratios[1:])),
+        "reshape_token_identical": reshape_row["token_identical"],
+        "reshape_stall_ratio": reshape_row["stall_ratio"],
+        "reshape_stall_bounded":
+            reshape_row["stall_ratio"] <= RESHAPE_STALL_RATIO}
+    summary["all_gates"] = (
+        summary["token_identical_all_k"]
+        and summary["bubble_within_slack_all_k"]
+        and summary["modeled_scaling_monotonic"]
+        and summary["reshape_token_identical"]
+        and summary["reshape_stall_bounded"])
+    rows.append(summary)
+    print(json.dumps(summary))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reqs", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--widths", type=int, nargs="+", default=[2, 3, 4])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    rows = bench(n_reqs=args.reqs, max_new=args.max_new,
+                 microbatches=args.microbatches,
+                 widths=tuple(args.widths), seed=args.seed)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {args.out}")
+    return 0 if rows[-1]["all_gates"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

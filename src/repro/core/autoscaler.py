@@ -25,6 +25,10 @@ Action kinds:
               token streams unchanged), and finally migrate the hot
               victim via pause -> fresh devices -> unpause without
               dropping its in-flight batch
+  reshape     change a pipeline gang's stage width K -> K±1 through the
+              journaled reshape op: grow the hottest gang when the engine
+              count is maxed but VFs remain; shrink a gang whose MEASURED
+              schedule bubble shows it burning a VF on idle ticks
 
 The policy is deliberately conservative and fully deterministic:
 
@@ -73,6 +77,14 @@ class EngineStats:
     migrations_aborted: int = 0
     migration_blocks_shipped: int = 0
     migration_stall_ticks: int = 0
+    # pipeline width (1 for single-VF engines): the second action
+    # dimension. ``stage_loads``/``bubble_frac`` are MEASURED from the
+    # engine's GPipe schedule walls (runtime.pipeline.schedule_stats),
+    # so a width action is justified by evidence, not geometry
+    stage_width: int = 1
+    stage_width_max: int = 1
+    stage_loads: tuple = ()
+    bubble_frac: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,11 +115,12 @@ class TelemetrySnapshot:
 class AutoscaleAction:
     """One planned reconfiguration. ``snapshot`` is the evidence — I11
     re-derives the action's preconditions from it, nothing else."""
-    kind: str                   # scale_out | scale_in | rebalance
+    kind: str                   # scale_out | scale_in | rebalance | reshape
     snapshot: TelemetrySnapshot
     victim: Optional[str] = None    # scale_in: engine to park;
-                                    # rebalance: the hot engine
+                                    # rebalance/reshape: the engine acted on
     target: Optional[str] = None    # rebalance: the cold engine
+    width: Optional[int] = None     # reshape: the new stage width K'
     reason: str = ""
 
 
@@ -122,9 +135,11 @@ class AutoscaleConfig:
     rebalance_migrate: bool = True  # migrate the hot victim after stealing
     pinned: tuple = ()              # engines never eligible for scale_in
                                     # (e.g. the fleet's ingress engine)
+    reshape_bubble: float = 0.5     # shrink a gang when its MEASURED
+                                    # schedule bubble reaches this share
 
 
-ACTION_KINDS = ("scale_out", "scale_in", "rebalance")
+ACTION_KINDS = ("scale_out", "scale_in", "rebalance", "reshape")
 
 
 def justify_action(action: AutoscaleAction,
@@ -172,6 +187,33 @@ def justify_action(action: AutoscaleAction,
             # the journaled request-migration op — either justifies it
             return (f"rebalance with nothing queued or in flight on "
                     f"{v.tid} to move")
+    elif action.kind == "reshape":
+        e = by_tid.get(action.victim)
+        if e is None:
+            return f"reshape victim {action.victim!r} not running"
+        w = action.width
+        if w is None or w < 1 or w == e.stage_width:
+            return (f"reshape of {e.tid} to width {w!r} from "
+                    f"{e.stage_width}")
+        if w > e.stage_width_max:
+            return (f"reshape of {e.tid} to width {w} past its "
+                    f"template ceiling {e.stage_width_max}")
+        if w > e.stage_width:
+            thr = snap.hot_threshold(cfg)
+            if e.load < thr:
+                return (f"grow-reshape of {e.tid} at load {e.load} < "
+                        f"hot threshold {thr}")
+            if snap.free_vfs < w - e.stage_width:
+                return (f"grow-reshape of {e.tid} needs "
+                        f"{w - e.stage_width} free VF(s), have "
+                        f"{snap.free_vfs}")
+        else:
+            # shrinking trades latency of a LIVE gang for capacity: only
+            # measured idleness (bubble) or full idleness justifies it
+            if e.bubble_frac < cfg.reshape_bubble and e.load != 0:
+                return (f"shrink-reshape of busy {e.tid} with measured "
+                        f"bubble {e.bubble_frac:.2f} < "
+                        f"{cfg.reshape_bubble}")
     else:
         return f"unknown action kind {action.kind!r}"
     return None
@@ -245,7 +287,39 @@ class Autoscaler:
                     "scale_out", snap,
                     reason=(f"{hottest.tid} at load {hottest.load} >= "
                             f"hot threshold {thr}"))
+            # engine count maxed but free VFs remain: widen the hottest
+            # gang instead (one more pipeline stage absorbs the load
+            # without another engine's params copy)
+            wide = [e for e in hot if e.stage_width < e.stage_width_max]
+            if snap.free_vfs > 0 and wide:
+                victim = max(wide, key=lambda e: (e.load, -e.index))
+                return AutoscaleAction(
+                    "reshape", snap, victim=victim.tid,
+                    width=victim.stage_width + 1,
+                    reason=(f"{victim.tid} at load {victim.load} >= "
+                            f"{thr} with engines maxed; widening "
+                            f"K={victim.stage_width}->"
+                            f"{victim.stage_width + 1}"))
             return None
+        if not hot:
+            # a gang whose MEASURED schedule bubble crossed the threshold
+            # is burning a VF on idle ticks: narrow it first — cheaper
+            # than parking a whole engine, and the freed VF becomes the
+            # next scale_out/grow-reshape's cheap path
+            bubbly = [e for e in running
+                      if e.stage_width > 1
+                      and e.bubble_frac >= cfg.reshape_bubble]
+            if bubbly:
+                victim = max(bubbly,
+                             key=lambda e: (e.bubble_frac, -e.index))
+                return AutoscaleAction(
+                    "reshape", snap, victim=victim.tid,
+                    width=victim.stage_width - 1,
+                    reason=(f"{victim.tid} measured bubble "
+                            f"{victim.bubble_frac:.2f} >= "
+                            f"{cfg.reshape_bubble}; narrowing "
+                            f"K={victim.stage_width}->"
+                            f"{victim.stage_width - 1}"))
         if not hot and len(running) > cfg.min_engines:
             idle = [e for e in running
                     if e.tid not in cfg.pinned

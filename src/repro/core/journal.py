@@ -39,7 +39,14 @@ COMPLETED_STATUS = {"attach": "running", "detach": "detached",
                     # request-granular live migration: the SOURCE tenant
                     # (the journaled tenant) keeps serving its batch, so a
                     # committed entry still implies "running"
-                    "migrate_request": "running"}
+                    "migrate_request": "running",
+                    # gang ops: the journaled tenant is the gang LEAD; its
+                    # shell members journal their own attach/detach entries
+                    # inside the gang window, and a reshape leaves the lead
+                    # serving throughout
+                    "attach_group": "running",
+                    "detach_group": "detached",
+                    "reshape": "running"}
 
 #: ops recovery knows how to reconcile (and I8 knows how to replay)
 JOURNALED_OPS = tuple(COMPLETED_STATUS)

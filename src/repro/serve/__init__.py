@@ -6,9 +6,12 @@ from repro.serve.fleet import EngineTenant, ServeFleet
 from repro.serve.paged import (BlockAllocator, CacheExhausted,
                                DoubleFreeError, RequestRejected,
                                UnknownRequestError)
+from repro.serve.pipeline_engine import PipelineServeEngine
+from repro.serve.stages import StageTemplate, build_templates
 from repro.serve.telemetry import MetricsBus, percentile
 
 __all__ = ["BlockAllocator", "CacheExhausted", "DoubleFreeError",
-           "DrainResult", "EngineTenant", "MetricsBus", "Request",
-           "RequestRejected", "ServeEngine", "ServeFleet",
-           "UnknownRequestError", "percentile"]
+           "DrainResult", "EngineTenant", "MetricsBus",
+           "PipelineServeEngine", "Request", "RequestRejected",
+           "ServeEngine", "ServeFleet", "StageTemplate",
+           "UnknownRequestError", "build_templates", "percentile"]

@@ -69,6 +69,10 @@ class EngineTenant:
         self.workload = "serve"
         self._exec_cache: dict = {}
         self._template = None
+        # pipeline gang: a stage-spanning engine's K-1 shell members
+        # (one VF each, stage 0 rides the lead's own VF). Empty for
+        # single-VF engines — the manager dispatches on truthiness.
+        self.gang_shells: tuple = ()
         self.run = types.SimpleNamespace(
             model=types.SimpleNamespace(name=engine.run.model.name),
             placement=placement, seed=engine.run.seed)
@@ -179,6 +183,24 @@ class EngineTenant:
     def reset_after_crash(self) -> None:
         self.engine.reset_after_crash()
 
+    # -- pipeline gang protocol (manager gang ops + I14) ---------------------
+    @property
+    def stage_width(self) -> int:
+        return getattr(self.engine, "stage_width", 1)
+
+    @property
+    def num_periods(self) -> int:
+        return self.engine.num_periods
+
+    def has_template(self, k: int) -> bool:
+        return self.engine.has_template(k)
+
+    def apply_reshape(self, k: int) -> None:
+        self.engine.apply_reshape(k)
+
+    def stage_bounds(self) -> tuple:
+        return self.engine.stage_bounds()
+
     # -- introspection -------------------------------------------------------
     @property
     def load(self) -> int:
@@ -197,6 +219,71 @@ class EngineTenant:
         pass
 
 
+class StageShellTenant:
+    """One pipeline stage's VF occupant. The LEAD's engine owns ALL
+    compute and state (params, KV pages, requests) — the shell exists so
+    invariant I1 (one tenant per attached VF) and every journaled manager
+    op see the gang's K VFs as K first-class tenants: a shell attaches,
+    detaches, pauses and recovers exactly like any tenant, it just has
+    (almost) no state of its own."""
+
+    def __init__(self, tid: str, lead: EngineTenant, stage_index: int, *,
+                 placement: str = "first_fit"):
+        self.tid = tid
+        self.lead = lead
+        self.stage_index = stage_index
+        self.status = "created"        # created|running|paused|detached
+        self.vf_id: Optional[str] = None
+        self.steps_done = 0
+        self.workload = "serve"
+        self._exec_cache: dict = {}    # pause snapshots its keys
+        self.run = types.SimpleNamespace(
+            model=lead.run.model, placement=placement, seed=lead.run.seed)
+
+    # -- lifecycle (the duck-typed tenant protocol, trivially) ---------------
+    def bind(self, vf: VirtualFunction, state=None, *,
+             flash: bool = True) -> float:
+        self.vf_id = vf.vf_id
+        self.status = "running"
+        vf.emulated.update({"tenant": self.tid, "status": "running",
+                            "steps_done": self.steps_done})
+        return 0.0
+
+    def export_state(self):
+        return {"stage": np.asarray(self.stage_index, np.int32)}
+
+    def state_template(self):
+        return {"stage": np.zeros((), np.int32)}
+
+    def export_specs(self):
+        return {}
+
+    def shardings_for(self, vf: VirtualFunction):
+        return None
+
+    def dirty_keys(self):
+        return set()
+
+    def suspend(self):
+        self.status = "paused"
+
+    def resume(self, state, vf: VirtualFunction):
+        self.bind(vf, state=state)
+
+    def detach(self):
+        self.vf_id = None
+        self.status = "detached"
+
+    def query(self) -> dict:
+        return {"tenant": self.tid, "status": self.status,
+                "vf": self.vf_id, "lead": self.lead.tid,
+                "stage_index": self.stage_index,
+                "workload": self.workload}
+
+    def inject_failure(self):
+        pass
+
+
 class ServeFleet:
     """Run ``num_engines`` ServeEngines as SVFF tenants over one pool."""
 
@@ -210,9 +297,18 @@ class ServeFleet:
                  slo_max_load: int = 64,
                  workdir: str = "/tmp/svff_fleet", devices=None,
                  autoscale: Optional[AutoscaleConfig] = None,
-                 spare_engines: int = 0, num_vfs: Optional[int] = None):
+                 spare_engines: int = 0, num_vfs: Optional[int] = None,
+                 stages: int = 1, max_stages: Optional[int] = None,
+                 microbatches: int = 2):
         self.run = run
         self.slo_max_load = slo_max_load
+        # stages > 1: every engine is a PipelineServeEngine spanning
+        # ``stages`` VFs (a gang of 1 lead + stages-1 shell tenants);
+        # ``max_stages`` bounds the reshape headroom (templates are
+        # precomputed up to it at engine construction)
+        self.stages = max(1, int(stages))
+        self.max_stages = max_stages
+        self.microbatches = microbatches
         devices = (tuple(devices) if devices is not None else
                    tuple(f"fleetdev{i}" for i in range(num_devices)))
         # the VF cap is the DEVICE budget (>= 1 device per VF), not the
@@ -237,7 +333,8 @@ class ServeFleet:
         # runs the paper's full reconf cycle (brief pause of every
         # engine) — exactly the SR-IOV spare-VF provisioning pattern
         tns = [self._spawn_tenant() for _ in range(num_engines)]
-        self.mgr.init(max(num_vfs or num_engines, num_engines), tns)
+        need = num_engines * self.stages      # every gang wants K VFs
+        self.mgr.init(max(num_vfs or need, need), tns)
         # parked standbys: spawned (own params copy, own executables when
         # warmed) but not attached — the autoscaler's cheap scale-out pool
         for _ in range(spare_engines):
@@ -259,10 +356,25 @@ class ServeFleet:
         exported leaves, so engines must not alias one pytree — guest
         isolation, like VMs not sharing guest RAM)."""
         i = len(self._order)
-        eng = ServeEngine(self.run,
-                          jax.tree.map(jax.numpy.array, self._params_src),
-                          **self._engine_kw)
+        params = jax.tree.map(jax.numpy.array, self._params_src)
+        if self.stages > 1:
+            from repro.serve.pipeline_engine import PipelineServeEngine
+            eng = PipelineServeEngine(self.run, params,
+                                      stages=self.stages,
+                                      max_stages=self.max_stages,
+                                      microbatches=self.microbatches,
+                                      **self._engine_kw)
+        else:
+            eng = ServeEngine(self.run, params, **self._engine_kw)
         tn = EngineTenant(f"serve{i}", eng, placement=self._policy)
+        if self.stages > 1:
+            # shells up to the TEMPLATE ceiling, not the initial width:
+            # a grow-reshape needs idle shells ready to attach
+            # "." separator: tids become RecordStore file names, so no "/"
+            tn.gang_shells = tuple(
+                StageShellTenant(f"{tn.tid}.s{j}", tn, j,
+                                 placement=self._policy)
+                for j in range(1, eng.max_stage_width))
         self.tenants[tn.tid] = tn
         self._order[tn.tid] = i
         return tn
@@ -316,6 +428,10 @@ class ServeFleet:
                     tn.engine.stats["defrag_events"])
                 self.telemetry.record_migration_stall(
                     tn.tid, tn.engine.stats["migration_stall_ticks"])
+                if getattr(tn.engine, "stage_width", 1) > 1:
+                    self.telemetry.record_stage_load(
+                        tn.tid, tn.engine.stage_loads(),
+                        tn.engine.measured_bubble)
                 # harvest only the suffix of _finished not yet scanned —
                 # the list is cleared by drain, and rescanning it whole
                 # would make the hot path O(completed history)
@@ -428,7 +544,12 @@ class ServeFleet:
                 migrations_aborted=self.telemetry.migrations_aborted[tid],
                 migration_blocks_shipped=self.telemetry.migration_blocks[tid],
                 migration_stall_ticks=(
-                    eng.stats["migration_stall_ticks"])))
+                    eng.stats["migration_stall_ticks"]),
+                stage_width=getattr(eng, "stage_width", 1),
+                stage_width_max=getattr(eng, "max_stage_width", 1),
+                stage_loads=(tuple(eng.stage_loads())
+                             if hasattr(eng, "stage_loads") else ()),
+                bubble_frac=getattr(eng, "measured_bubble", 0.0)))
         return TelemetrySnapshot(
             epoch=self._epoch, slo_max_load=self.slo_max_load,
             engines=tuple(stats), free_vfs=len(self._free_vfs()),
@@ -450,6 +571,8 @@ class ServeFleet:
             self.scale_out()
         elif action.kind == "scale_in":
             self.scale_in(action.victim)
+        elif action.kind == "reshape":
+            self.reshape_engine(action.victim, action.width)
         else:
             self.rebalance(action.victim, action.target)
         return action
@@ -461,8 +584,14 @@ class ServeFleet:
         (running engines pause briefly — their queues hold — and resume
         on the new partition)."""
         free = self._free_vfs()
-        n = len(self.pool.vfs) + 1
-        if not free and n > self.pool.num_devices:
+        # gang-aware device budget: a K-stage engine consumes K VFs, so
+        # "is there room" must count the VFs a whole gang needs, not 1 —
+        # the old `len(vfs) + 1` let a K>1 scale-out past the clamp and
+        # fail halfway through carving
+        need = self.stages
+        missing = max(0, need - len(free))
+        n = len(self.pool.vfs) + missing
+        if missing and n > self.pool.num_devices:
             # validate BEFORE spawning: a fresh tenant registered here
             # would leak (params copy + a never-attachable fleet entry)
             raise ManagerError(
@@ -472,8 +601,11 @@ class ServeFleet:
                          if tn.status in ("created", "detached")),
                         key=lambda tn: self._order[tn.tid])
         tn = parked[0] if parked else self._spawn_tenant()
-        if free:
-            self.mgr.attach(tn)
+        if not missing:
+            if tn.gang_shells:
+                self.mgr.attach_group(tn)
+            else:
+                self.mgr.attach(tn)
         else:
             self.mgr.reconf(n, new_tenants=[tn],
                             devices_per_vf=max(
@@ -577,6 +709,30 @@ class ServeFleet:
         if migrate and s.status == "running":
             self.mgr.migrate(s)
         return moved
+
+    def reshape_engine(self, tid: str, width: int) -> dict:
+        """Re-instantiate a gang engine at ``width`` stages via the
+        journaled manager reshape — in-flight token streams unchanged
+        (I10), the gang matching exactly one registered template before
+        and after (I14)."""
+        tn = self.tenants[tid]
+        if not tn.gang_shells:
+            raise ManagerError(
+                f"reshape_engine: {tid} is not a pipeline gang")
+        return self.mgr.reshape(tn, width)
+
+    def handle_vf_loss(self, tid: str, vf_id: str) -> dict:
+        """A gang member's VF died (device failure): shed exactly that
+        stage and re-instantiate the engine at K-1 through the same
+        journaled reshape, so the fallback is crash-covered and the
+        surviving K-1 stages keep every request byte. The lead's own VF
+        dying is a full engine crash — that path is ``recover_engine``."""
+        tn = self.tenants[tid]
+        shell = next((s for s in tn.gang_shells if s.vf_id == vf_id), None)
+        if shell is None:
+            raise ManagerError(
+                f"handle_vf_loss: {vf_id} backs no active stage of {tid}")
+        return self.mgr.reshape(tn, tn.stage_width - 1, drop=shell.tid)
 
     def recover_engine(self, tid: str) -> dict:
         """An engine CRASHED mid-serving (its device state is gone):

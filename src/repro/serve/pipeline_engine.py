@@ -1,0 +1,245 @@
+"""PipelineServeEngine — one serving engine spanning K VFs as pipeline
+stages.
+
+The engine IS a ``ServeEngine``: admission, sampling (the I10 oracle),
+paged-KV bookkeeping, migration, pause/export — all inherited unchanged.
+What changes is the two jitted entry points:
+
+  ``_prefill``   runs the B=1 prompt through the K per-stage prefill
+                 functions sequentially and reassembles the full-layout
+                 request cache (period axis concatenation), so the base
+                 class's copy-on-admit path is byte-identical
+  ``_decode``    a HOST-side GPipe schedule: the active slots split into
+                 M round-robin microbatch groups, and work item
+                 (stage s, group m) runs at tick s+m
+                 (``runtime.pipeline.serve_schedule``), each stage
+                 threading its own KV slice through its groups
+
+The batched cache keeps the FULL layout (every leaf leads with the
+period axis), exactly as in the single-VF engine — stages only ever see
+``leaf[lo:hi]`` slices at call time and the updated slices concatenate
+back. That single decision is what makes width elastic: a reshape K→K'
+is a pure re-layout (new template bounds, re-sliced params, different
+jitted stage functions over the SAME bytes), so every in-flight request
+decodes bit-identically across it (I10), and the base class's
+export/import/migration plumbing — which only indexes the leading axis
+by page or period id — needs no pipeline awareness at all.
+
+Masked per-group stage calls are bit-identical to one full-batch call
+because decode rows are independent (each slot attends only through its
+own block table) and inactive rows are masked to the reserved garbage
+page; the schedule changes WHEN a slot's row is computed, never what it
+reads.
+
+Per-item wall times feed ``runtime.pipeline.schedule_stats``: the
+measured bubble fraction (vs the analytic ``bubble_fraction(M, S)``)
+and per-stage busy seconds surface through ``EngineStats`` so the
+autoscaler can justify width actions with evidence, not geometry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.pipeline import schedule_stats, serve_schedule
+from repro.serve.engine import ServeEngine
+from repro.serve.stages import (StageTemplate, build_templates,
+                                make_stage_decode, make_stage_prefill,
+                                pipeline_supported, split_stage_params)
+
+
+class PipelineServeEngine(ServeEngine):
+    def __init__(self, run, params, *, stages: int = 2,
+                 max_stages: Optional[int] = None, microbatches: int = 2,
+                 rules=None, **kw):
+        ok, why = pipeline_supported(run.model)
+        if not ok:
+            raise ValueError(f"pipeline serving for {run.model.name}: "
+                             f"{why}")
+        if kw.pop("fused_sampling", False):
+            raise ValueError("pipeline serving samples on the host "
+                             "(the I10 oracle); fused_sampling=False")
+        if kw.pop("prefill_chunk", 0):
+            raise ValueError("pipeline serving prefills whole prompts; "
+                             "prefill_chunk=0")
+        kw["paged"] = True
+        # force the unrolled layer path: stage period counts differ per
+        # template, and scan-vs-unroll is a different XLA program — the
+        # unrolled path everywhere is what makes token streams
+        # bit-identical across EVERY registered K
+        run = dataclasses.replace(
+            run, sharding=dataclasses.replace(run.sharding,
+                                              scan_layers=False))
+        super().__init__(run, params, rules=rules, **kw)
+        cfg = run.model
+        plen = len(cfg.block_pattern)
+        self.num_periods = cfg.num_layers // plen
+        want_max = max(stages, max_stages or stages)
+        self.templates: dict = build_templates(self.num_periods, want_max)
+        if stages not in self.templates:
+            raise ValueError(
+                f"no stage template for K={stages} "
+                f"(registered: {sorted(self.templates)})")
+        self.max_stage_width = max(self.templates)
+        self.microbatches = max(1, int(microbatches))
+        self._k = stages
+        self._rules = rules
+        # precompute the per-stage jitted step functions for EVERY
+        # registered template at init — a reshape (VF loss, scale
+        # pressure) selects an existing entry instead of building one
+        self._stage_decode: dict = {}
+        self._stage_prefill: dict = {}
+        for k, tpl in self.templates.items():
+            dfs, pfs = [], []
+            for i in range(k):
+                lo, hi = tpl.stage_range(i)
+                first, last = i == 0, i == k - 1
+                dfs.append(jax.jit(make_stage_decode(
+                    run, rules, lo, hi, first=first, last=last)))
+                pfs.append(jax.jit(make_stage_prefill(
+                    run, rules, lo, hi, first=first, last=last)))
+            self._stage_decode[k] = dfs
+            self._stage_prefill[k] = pfs
+        # param slices are cached per (params object, k) and rebuilt when
+        # either changes (import_state swaps params; reshape swaps k)
+        self._sparams_src = None
+        self._sparams_k = 0
+        self._sparams: list = []
+        # measured schedule telemetry (cumulative since last reshape)
+        self.stage_busy_s: list = [0.0] * stages
+        self._cum_busy = 0.0
+        self._cum_makespan = 0.0
+        self.measured_bubble = 0.0
+        self.sched_ticks = 0
+        self.reshape_count = 0
+        # signature-compatible overrides: the base class's step() /
+        # _prefill_full() drive these exactly like the jitted originals
+        self._prefill = self._pipeline_prefill
+        self._decode = self._pipeline_decode
+
+    # -- template / width protocol (manager gang ops + I14) ------------------
+    @property
+    def stage_width(self) -> int:
+        return self._k
+
+    def has_template(self, k: int) -> bool:
+        return k in self.templates
+
+    def stage_bounds(self) -> tuple:
+        return self.templates[self._k].bounds
+
+    def template(self) -> StageTemplate:
+        return self.templates[self._k]
+
+    def apply_reshape(self, k: int) -> None:
+        """Re-instantiate at width ``k``: select the registered template,
+        drop the stage-param slice cache, reset the per-stage telemetry
+        window. The batched KV cache and every request byte are
+        untouched — a reshape changes the program layout, not the state
+        — which is the whole bit-identity argument. Idempotent at the
+        current width."""
+        if k == self._k:
+            return
+        if k not in self.templates:
+            raise ValueError(f"no stage template for K={k} "
+                             f"(registered: {sorted(self.templates)})")
+        self._k = k
+        self._sparams_src = None
+        self.stage_busy_s = [0.0] * k
+        self._cum_busy = 0.0
+        self._cum_makespan = 0.0
+        self.measured_bubble = 0.0
+        self.reshape_count += 1
+
+    def stage_loads(self) -> tuple:
+        """Per-stage busy share of the measured makespan (0..1 each)."""
+        if self._cum_makespan <= 0.0:
+            return tuple(0.0 for _ in range(self._k))
+        return tuple(b / self._cum_makespan for b in self.stage_busy_s)
+
+    def _stage_param_slices(self) -> list:
+        if self._sparams_src is not self.params or self._sparams_k != self._k:
+            self._sparams = split_stage_params(
+                self.params, self.run.model, self.templates[self._k])
+            self._sparams_src = self.params
+            self._sparams_k = self._k
+        return self._sparams
+
+    # -- the two overridden entry points --------------------------------------
+    def _pipeline_prefill(self, params, batch):
+        """(params, batch) -> (full-layout request cache, last logits) —
+        the contract ``_prefill_full`` expects. ``params`` is ignored in
+        favour of the stage slices (same values, sliced)."""
+        sp = self._stage_param_slices()
+        fns = self._stage_prefill[self._k]
+        y = batch["tokens"]
+        caches = []
+        for i, fn in enumerate(fns):
+            y, c = fn(sp[i], y)
+            caches.append(c)
+        full = jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0),
+                            *caches)
+        return full, y
+
+    def _pipeline_decode(self, params, cache, tokens, pos, tables,
+                         active):
+        """(params, cache, tokens, pos, tables, active) ->
+        (logits (B,V), cache) — the paged non-fused decode contract, run
+        as a host-side GPipe schedule over K stage slices and M
+        round-robin microbatch groups."""
+        sp = self._stage_param_slices()
+        fns = self._stage_decode[self._k]
+        K = self._k
+        tpl = self.templates[K]
+        act = np.asarray(active)
+        idx = np.flatnonzero(act)
+        M = max(1, min(len(idx), self.microbatches))
+        groups = [idx[m::M] for m in range(M)]
+        pos_np = np.asarray(pos)
+        gmasks, gposs = [], []
+        for m in range(M):
+            gm = np.zeros(act.shape, bool)
+            gm[groups[m]] = True
+            gmasks.append(jnp.asarray(gm))
+            # the decode contract: pos < 0 marks a masked row
+            gposs.append(jnp.asarray(
+                np.where(gm, pos_np, -1).astype(pos_np.dtype)))
+        slices = []
+        for i in range(K):
+            lo, hi = tpl.stage_range(i)
+            slices.append(jax.tree.map(
+                lambda l, lo=lo, hi=hi: l[lo:hi], cache))
+        xs: list = [tokens] * M          # stage-0 input is the token ids
+        last_rows: list = [None] * M
+        walls = [[0.0] * M for _ in range(K)]
+        for s, m in serve_schedule(M, K):
+            t0 = time.perf_counter()
+            y, ns = fns[s](sp[s], slices[s], xs[m], gposs[m], tables,
+                           gmasks[m])
+            jax.block_until_ready(y)
+            walls[s][m] = time.perf_counter() - t0
+            slices[s] = ns
+            if s == K - 1:
+                last_rows[m] = np.asarray(y)
+            else:
+                xs[m] = y
+        new_cache = jax.tree.map(
+            lambda *parts: jnp.concatenate(parts, axis=0), *slices)
+        out = np.zeros_like(last_rows[0])
+        for m in range(M):
+            out[groups[m]] = last_rows[m][groups[m]]
+        st = schedule_stats(walls)
+        for i in range(K):
+            self.stage_busy_s[i] += st.stage_busy[i]
+        self._cum_busy += st.busy
+        self._cum_makespan += st.makespan
+        if self._cum_makespan > 0.0:
+            self.measured_bubble = max(
+                0.0, 1.0 - self._cum_busy / (K * self._cum_makespan))
+        self.sched_ticks += M + K - 1
+        return out, new_cache

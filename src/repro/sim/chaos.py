@@ -43,7 +43,8 @@ from repro.core.qmp import ControlPlane
 from repro.core.staging import StagingEngine
 from repro.sim.clock import VirtualClock
 from repro.sim.invariants import InvariantViolation, check_invariants
-from repro.sim.tenant import SimServeTenant, SimTenant
+from repro.sim.tenant import (SimPipelineTenant, SimServeTenant,
+                              SimTenant)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +98,27 @@ CRASH_POINTS: dict[str, CrashSpec] = {s.point: s for s in (
               "complete",
               "last instant before the only destructive step; same "
               "target-owns predicate rolls forward"),
+    # -- elastic pipeline gangs (PR 9). outcome names the GANG OP's
+    # fate. attach_group "none" is the one rollback whose victim does
+    # NOT return to its pre-op status: the lead was attached (and its
+    # state recorded) before the window, so rolling the gang back
+    # detaches it — the lead ends "detached" with state parked on disk,
+    # re-attachable as a whole gang. reshape outcomes are asserted on
+    # ``stage_width`` (+ I14), since the lead stays "running" either way
+    # (COMPLETED_STATUS["reshape"]).
+    CrashSpec("gang_mid_member", ("attach_group",), "none",
+              "lead attached and journaled, first shell mid-attach; "
+              "recovery detaches the running members and parks the "
+              "gang (lead ends detached, not created)"),
+    CrashSpec("gang_before_commit", ("attach_group",), "complete",
+              "every member running, gang WAL commit lost; recovery "
+              "rolls the whole gang forward"),
+    CrashSpec("reshape_mid_members", ("reshape",), "none",
+              "reshape journaled, no member touched yet; recovery "
+              "restores the old width exactly (grow and shrink alike)"),
+    CrashSpec("reshape_before_commit", ("reshape",), "complete",
+              "members attached/detached to the new width, commit "
+              "lost; recovery re-applies the new template"),
 )}
 
 
@@ -170,6 +192,11 @@ def _fire(mgr: SVFFManager, trigger: str, point: str,
                        and getattr(tn, "status", None) == "running"
                        and hasattr(tn, "admit_migrated"))
             mgr.migrate_request(victim, dst)
+        elif trigger == "attach_group":
+            mgr.attach_group(victim)
+        elif trigger == "reshape":
+            # the target width is staged on the lead by run_crash_case
+            mgr.reshape(victim, victim._crash_reshape_k)
         else:
             raise ValueError(f"unknown crash trigger {trigger!r}")
         raise InvariantViolation(
@@ -224,6 +251,26 @@ def run_crash_case(point: str, seed: int, policy: str = "first_fit",
             if mig_rid is None:
                 raise InvariantViolation(
                     "setup: sv0 never reached an in-flight request")
+        elif trigger in ("attach_group", "reshape"):
+            # gang-shaped cell: pg0 is a pipeline lead with shells up to
+            # width 3, vm0 the bystander. 8 devices / 4 VFs at 2 devices
+            # each: bystander + lead + one shell = 3 VFs, leaving one
+            # free so the grow direction of reshape is placeable.
+            victim = SimPipelineTenant("pg0", seed=seed * 13 + 2,
+                                       clock=clock, placement=policy,
+                                       width=2, max_width=3)
+            tenants[victim.tid] = victim
+            for sh in victim.gang_shells:
+                tenants[sh.tid] = sh
+            mgr.init(num_vfs=4, tenants=[bystander], devices_per_vf=2)
+            bystander.run_steps(1 + seed % 3)
+            if trigger == "reshape":
+                # the gang must already be live, with traffic in flight
+                # so I10 is checked ACROSS the crashed width change
+                mgr.attach_group(victim)
+                victim.submit_burst(2)
+                victim.run_steps(2)
+                victim._crash_reshape_k = 1 if seed % 2 else 3
         else:
             other = make("vm1", seed * 13 + 2)
             mgr.init(num_vfs=3, tenants=[bystander, other],
@@ -253,6 +300,11 @@ def run_crash_case(point: str, seed: int, policy: str = "first_fit",
                 else _COMPLETED_STATUS[trigger])
         if trigger == "qmp":
             want = pre_status
+        if trigger == "attach_group" and spec.outcome == "none":
+            # the one rollback that does not restore the pre-op status:
+            # the lead was attached before the window, so rolling the
+            # gang back detaches it (state parked on disk, catalogued)
+            want = "detached"
         if victim.status != want:
             raise InvariantViolation(
                 f"outcome: {trigger} + {point} left {victim.tid} "
@@ -263,6 +315,32 @@ def run_crash_case(point: str, seed: int, policy: str = "first_fit",
                 raise InvariantViolation(
                     f"step counter drift for {tid} across crash+recover: "
                     f"{tenants[tid].steps_done} != {steps + add}")
+
+        if trigger in ("attach_group", "reshape"):
+            # I14 sharpened per-cell: the recovered gang is at exactly
+            # the cataloged width with exactly width-1 running shells —
+            # a half-attached gang or half-applied reshape fails here
+            # even before check_invariants would catch it
+            live = [sh.tid for sh in victim.gang_shells
+                    if sh.status == "running"]
+            if trigger == "attach_group" and spec.outcome == "none":
+                if live:
+                    raise InvariantViolation(
+                        f"gang rollback after {point} left shells "
+                        f"running: {live}")
+            else:
+                want_k = (victim._crash_reshape_k
+                          if trigger == "reshape"
+                          and spec.outcome == "complete" else 2)
+                if victim.stage_width != want_k:
+                    raise InvariantViolation(
+                        f"gang outcome: width {victim.stage_width} != "
+                        f"cataloged {want_k} after {point} recovery")
+                if len(live) != want_k - 1:
+                    raise InvariantViolation(
+                        f"gang outcome: {len(live)} running shells "
+                        f"{live} after {point} recovery, want "
+                        f"{want_k - 1}")
 
         if trigger == "migrate_request":
             # I13 sharpened per-cell: the request survives on exactly the
@@ -303,7 +381,10 @@ def run_crash_case(point: str, seed: int, policy: str = "first_fit",
         if victim.status == "paused":
             mgr.unpause(victim)
         elif victim.status == "detached":
-            mgr.attach(victim)
+            if getattr(victim, "gang_shells", None):
+                mgr.attach_group(victim)    # a parked gang re-attaches whole
+            else:
+                mgr.attach(victim)
         if victim.status == "running":
             victim.run_steps(1)
         mgr.pause(bystander)

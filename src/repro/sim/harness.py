@@ -40,7 +40,8 @@ from repro.sim.invariants import (InvariantViolation, check_autoscale,
                                   check_invariants, check_pause_timings,
                                   check_timings)
 from repro.sim.scenario import Op, ScenarioConfig, generate_scenario
-from repro.sim.tenant import SimServeTenant, SimTenant
+from repro.sim.tenant import (SimPipelineTenant, SimServeTenant,
+                              SimTenant)
 
 #: exception types an op may legally be rejected with (atomically).
 #: All TYPED: a blanket KeyError here once masked real bugs (e.g. a
@@ -123,7 +124,19 @@ class ScenarioRunner:
     # ----------------------------------------------------------------- ops
     def _tenant(self, tid: str) -> SimTenant:
         if tid not in self.tenants:
-            if tid.startswith("sv"):
+            if tid.startswith("pg"):
+                # pipeline gang lead: a serving tenant that spans up to
+                # max_width VFs; its shell members register alongside it
+                # so crash recovery and the step-counter check see them
+                lead = SimPipelineTenant(
+                    tid, seed=self.cfg.seed, clock=self.clock,
+                    placement=self.cfg.policy,
+                    leaf_size=self.cfg.leaf_size)
+                self.tenants[tid] = lead
+                for sh in lead.gang_shells:
+                    self.tenants[sh.tid] = sh
+                    self.expected_steps[sh.tid] = 0
+            elif tid.startswith("sv"):
                 # serving tenants: paged toy engine, I10-checked outputs
                 self.tenants[tid] = SimServeTenant(
                     tid, seed=self.cfg.seed, clock=self.clock,
@@ -153,7 +166,16 @@ class ScenarioRunner:
             return None
         assert mgr is not None, "scenario must start with init"
         if op.kind == "attach":
-            mgr.attach(self._tenant(op.tenant))
+            tn = self._tenant(op.tenant)
+            if getattr(tn, "gang_shells", None):
+                mgr.attach_group(tn)     # lead + shells, atomically
+            else:
+                mgr.attach(tn)
+        elif op.kind == "reshape":
+            # journaled gang width change: attach/detach shell members
+            # to reach op.num_vfs stages, then apply the template
+            mgr.reshape(self._tenant(op.tenant), op.num_vfs)
+            clock.advance(0.02)
         elif op.kind == "detach":
             mgr.detach(self._tenant(op.tenant))
             clock.advance(0.02)

@@ -38,6 +38,12 @@ Op kinds (the paper's management surface + fault injection):
            serving tenant / detach an idle one / move queued requests
            hot->cold + migrate) through the journaled manager ops;
            invariant I11 then checks the action against the snapshot
+  reshape  re-instantiate the pipeline gang lead pg0 at a new stage
+           width K' through the journaled ``SVFFManager.reshape`` gang
+           op (attach/detach the shell members, apply the registered
+           template); invariant I14 then checks the gang's VF set
+           matches the template and I10 that in-flight token streams
+           crossed the width change bit-identically
   migrate_request  live-migrate one in-flight request between running
            serving engines through the journaled manager op: extract
            its KV block chain on the source, ship it through the
@@ -64,7 +70,8 @@ from typing import Optional
 
 OP_KINDS = ("init", "attach", "detach", "pause", "pause_live", "unpause",
             "reconf", "migrate", "fault", "step", "crash",
-            "serve_submit", "serve_step", "autoscale", "migrate_request")
+            "serve_submit", "serve_step", "autoscale", "migrate_request",
+            "reshape")
 
 #: arrival-pattern shapes for serve_submit bursts ("bursty" is the
 #: original mix and the default; the others model the traffic traces the
@@ -119,6 +126,15 @@ class ScenarioConfig:
     # journaled ``SVFFManager.migrate_request`` op (no migratable
     # request / no pair is a no-op; CacheExhausted is a clean abort)
     migrate_rate: float = 0.0
+    # elastic pipeline gang (0 keeps earlier sequences byte-identical):
+    # at this rate the scenario attaches a pipeline gang lead "pg0" at
+    # width K=2 right after init (via the journaled attach_group) and
+    # emits ``reshape`` ops that alternate its width 2<->3, interleaved
+    # with serve traffic on pg0 so width changes cross in-flight token
+    # streams; invariant I14 checks gang/template coherence after every
+    # op. Enabled only when the VF/device budget can hold the trainers,
+    # the sv engines AND the gang at max width (3 VFs)
+    reshape_rate: float = 0.0
     # serve_submit burst shape (see ARRIVAL_PATTERNS): "bursty" (default,
     # the original draw), "ramp" (bursts grow across the scenario),
     # "spike" (mostly quiet with rare large bursts), "diurnal" (sinusoid)
@@ -153,6 +169,19 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
             serve = mig = False      # no room for a second VF: no sv0
         elif nvf < m + 2:
             mig = False              # no room for sv1: no migrations
+    pipe = cfg.reshape_rate > 0
+    if pipe:
+        # the gang lead pg0 spans up to 3 VFs (width alternates 2<->3):
+        # enable only when trainers + serve engines + the gang at max
+        # width all fit the VF and device budgets
+        sv_extra = (2 if mig else 1) if serve else 0
+        want = m + sv_extra + 3
+        if want <= min(cfg.max_vfs, cfg.num_devices):
+            nvf = max(nvf, want)
+            if per * nvf > cfg.num_devices:
+                per = 1
+        else:
+            pipe = False
     ops.append(Op("init", num_vfs=nvf, devices_per_vf=per, num_tenants=m))
 
     # validity model
@@ -175,6 +204,17 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
             # with live pauses and autoscaling
             ops.append(Op("attach", tenant="sv1"))
             running.append("sv1")
+    gang_k = 0
+    if pipe:
+        # the gang lead stays OUT of the shared validity model: its
+        # width changes are driven exclusively by reshape ops, never by
+        # pause/detach/fault/migrate draws. ``gang_k`` tracks how many
+        # VFs the gang occupies (lead + width-1 shells) so the attach /
+        # reconf budgets below stay honest.
+        ops.append(Op("attach", tenant="pg0"))      # harness: attach_group
+        ops.append(Op("serve_submit", tenant="pg0",
+                      burst=rng.choice([1, 2])))
+        gang_k = 2
 
     def tenant_count():
         return len(running) + len(paused) + len(detached) + 0
@@ -186,6 +226,26 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
         if serve and cfg.autoscale_rate and \
                 rng.random() < cfg.autoscale_rate:
             ops.append(Op("autoscale"))
+            continue
+        if gang_k and rng.random() < cfg.reshape_rate:
+            # gated on gang_k truthiness so reshape_rate=0 draws nothing
+            r = rng.random()
+            if r < 0.4:
+                k_new = 3 if gang_k == 2 else 2
+                free = total_vfs - len(running) - len(paused) - gang_k
+                if k_new > gang_k and free < k_new - gang_k:
+                    # no idle VF for the extra shell: serve instead
+                    ops.append(Op("serve_step", tenant="pg0", steps=1))
+                else:
+                    ops.append(Op("reshape", tenant="pg0",
+                                  num_vfs=k_new))
+                    gang_k = k_new
+            elif r < 0.7:
+                ops.append(Op("serve_submit", tenant="pg0",
+                              burst=rng.choice([1, 2, 3])))
+            else:
+                ops.append(Op("serve_step", tenant="pg0",
+                              steps=rng.randint(1, 2)))
             continue
         if mig and rng.random() < cfg.migrate_rate:
             # harness picks the (src, dst) pair deterministically among
@@ -202,8 +262,9 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
         if cfg.crash_rate and rng.random() < cfg.crash_rate:
             # crash ops mutate the model per the cataloged recovery
             # outcome, so the sequence stays valid after the recovery
+            # (gang VFs are subtracted so attach triggers stay reachable)
             op = _crash_op(rng, cfg, running, paused, detached,
-                           total_vfs, next_id)
+                           total_vfs - gang_k, next_id)
             if op is not None:
                 if op.trigger == "attach" and op.tenant == f"vm{next_id}":
                     next_id += 1
@@ -227,7 +288,8 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
             paused.remove(t); running.append(t)
             ops.append(Op("unpause", tenant=t))
         elif kind == "reconf":
-            occupied = len(running) + len(paused)
+            # gang members (lead + shells) hold VFs like any live tenant
+            occupied = len(running) + len(paused) + gang_k
             lo = 1
             hi = cfg.max_vfs
             n = rng.randint(lo, hi)
@@ -236,12 +298,12 @@ def generate_scenario(cfg: ScenarioConfig) -> tuple[Op, ...]:
                 rng.choice([1, 2])
             if p * (n + occupied) > cfg.num_devices:
                 p = 1
-            if n + 0 < len(running):         # keep every live tenant placeable
-                n = len(running) or 1
+            if n < len(running) + gang_k:    # keep every live tenant placeable
+                n = (len(running) + gang_k) or 1
             ops.append(Op("reconf", num_vfs=n, devices_per_vf=p))
             total_vfs = max(n, occupied)
         elif kind == "attach":
-            free = total_vfs - len(running) - len(paused)
+            free = total_vfs - len(running) - len(paused) - gang_k
             if free <= 0:
                 continue
             if detached and rng.random() < 0.5:
@@ -339,11 +401,12 @@ def _crash_op(rng, cfg, running, paused, detached, total_vfs,
                     cands.append((point, trig, f"vm{next_id}"))
             elif trig == "qmp":
                 cands.append((point, trig, None))
-            elif trig == "migrate_request":
-                # needs an in-flight request on a serving engine plus
-                # target-side KV headroom — preconditions the validity
-                # model cannot track; the migration crash windows are
-                # covered by the run_crash_case matrix instead
+            elif trig in ("migrate_request", "attach_group", "reshape"):
+                # needs preconditions the validity model cannot track
+                # (an in-flight request + target KV headroom, or a gang
+                # lead with the right shell/VF configuration); these
+                # crash windows are covered by the run_crash_case
+                # matrix instead
                 continue
     if not cands:
         return None

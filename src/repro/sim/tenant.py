@@ -586,6 +586,77 @@ class SimServeTenant:
         self._fail_next = True
 
 
+class SimPipelineTenant(SimServeTenant):
+    """A serving tenant that LEADS a pipeline gang — the sim analogue of
+    the fleet's ``PipelineServeEngine`` + shell tenants.
+
+    The lead is a full ``SimServeTenant`` (queue, paged KV, I10 oracle)
+    that additionally carries ``gang_shells``: one plain ``SimTenant``
+    per extra stage, pre-built at MAX width so a grow-reshape attaches an
+    existing shell instead of minting one (mirrors the fleet, where
+    shells are created up to ``max_stage_width`` for headroom). Shell
+    tids use a ``.`` separator (``pg0.s1``) because tids become
+    RecordStore file names.
+
+    ``apply_reshape(k)`` only moves the width pointer: the toy model's
+    cells are pure functions of absolute indices, so token bit-identity
+    across a reshape (I10) holds by construction here — what the sim
+    adds on top is the MANAGEMENT-plane story (journaled gang ops, crash
+    windows, I14 gang coherence), which is exactly what the real engine
+    cannot exercise cheaply at scenario scale."""
+
+    #: period count the stage templates partition (divisible by 1..3)
+    SIM_NPER = 12
+
+    def __init__(self, tid: str, seed: int = 0, *,
+                 clock: Optional[VirtualClock] = None,
+                 placement: str = "first_fit", width: int = 2,
+                 max_width: int = 3, leaf_size: int = 16):
+        super().__init__(tid, seed=seed, clock=clock, placement=placement)
+        assert 1 <= width <= max_width <= self.SIM_NPER
+        self._width = int(width)
+        self.max_stage_width = int(max_width)
+        self.num_periods = self.SIM_NPER
+        self.reshape_count = 0
+        # disjoint rid space: sv* engines mint rids from 0 and share one
+        # request plane (rebalance/migration moves rids between them);
+        # the gang lead never exchanges requests with them, but I13
+        # keys liveness by rid across ALL serve-shaped tenants
+        self._next_rid = 1_000_000
+        self.gang_shells = tuple(
+            SimTenant(f"{tid}.s{i}", seed=seed * 31 + i,
+                      leaf_size=leaf_size, clock=clock,
+                      placement=placement)
+            for i in range(1, max_width))
+        for sh in self.gang_shells:
+            sh.lead = self
+
+    # -- template / width protocol (manager gang ops + I14) ----------------
+    @property
+    def stage_width(self) -> int:
+        return self._width
+
+    def has_template(self, k: int) -> bool:
+        return 1 <= k <= self.max_stage_width
+
+    def stage_bounds(self) -> tuple:
+        base, rem = divmod(self.SIM_NPER, self._width)
+        bounds = [0]
+        for i in range(self._width):
+            bounds.append(bounds[-1] + base + (1 if i < rem else 0))
+        return tuple(bounds)
+
+    def apply_reshape(self, k: int) -> None:
+        """Pure width relayout, idempotent at the current width (the
+        manager's crash recovery re-applies it unconditionally)."""
+        if k == self._width:
+            return
+        if not self.has_template(k):
+            raise ValueError(f"no sim stage template for K={k}")
+        self._width = int(k)
+        self.reshape_count += 1
+
+
 class ServeSimTenant:
     """Serving-shaped pause-protocol stub: big IMMUTABLE params plus a
     small hot cache that every decode step replaces — the exact dirty

@@ -25,16 +25,21 @@ def setup():
 
 
 def snap(loads, *, epoch=0, slo=8, free_vfs=1, grow=0, queued=None,
-         jobs=None):
-    """Synthetic telemetry: engine i running at loads[i]."""
+         jobs=None, widths=None, wmax=None, bubbles=None):
+    """Synthetic telemetry: engine i running at loads[i]; widths/wmax/
+    bubbles optionally give each engine a pipeline-gang shape."""
     queued = queued if queued is not None else loads
     jobs = jobs or [0] * len(loads)
+    widths = widths or [1] * len(loads)
+    wmax = wmax or widths
+    bubbles = bubbles or [0.0] * len(loads)
     return TelemetrySnapshot(
         epoch=epoch, slo_max_load=slo,
         engines=tuple(
             EngineStats(tid=f"e{i}", index=i, status="running",
                         load=loads[i], queue_depth=queued[i],
-                        prefill_jobs=jobs[i])
+                        prefill_jobs=jobs[i], stage_width=widths[i],
+                        stage_width_max=wmax[i], bubble_frac=bubbles[i])
             for i in range(len(loads))),
         free_vfs=free_vfs, grow_budget=grow)
 
@@ -122,6 +127,73 @@ def test_justification_catches_unjustified_actions():
             (AutoscaleAction("rebalance", snap([3, 2]), victim="e0",
                              target="e1"), "without imbalance"),
             (AutoscaleAction("warp", cold), "unknown action")):
+        err = justify_action(bogus, cfg)
+        assert err is not None and needle in err
+        with pytest.raises(InvariantViolation, match="I11"):
+            check_autoscale(bogus, cfg)
+
+
+# ===========================================================================
+# the width dimension: grow/shrink reshape in the policy loop
+# ===========================================================================
+def test_grow_reshape_only_when_engines_maxed():
+    """With engine-count headroom a hot fleet scales OUT; only once
+    ``max_engines`` is hit does the planner widen the hottest gang —
+    and then only if a free VF exists and the gang has template room."""
+    cfg = AutoscaleConfig(hysteresis=1, cooldown=0, max_engines=1)
+    act = Autoscaler(cfg).observe(
+        snap([9], widths=[2], wmax=[4], free_vfs=1))
+    assert act is not None and act.kind == "reshape"
+    assert act.victim == "e0" and act.width == 3
+    assert justify_action(act, cfg) is None
+    # engine headroom -> scale_out wins over widening
+    roomy = AutoscaleConfig(hysteresis=1, cooldown=0, max_engines=4)
+    act = Autoscaler(roomy).observe(
+        snap([9], widths=[2], wmax=[4], free_vfs=1))
+    assert act is not None and act.kind == "scale_out"
+    # no free VF -> nothing to widen with
+    assert Autoscaler(cfg).observe(
+        snap([9], widths=[2], wmax=[4], free_vfs=0)) is None
+    # at the template ceiling -> no grow either
+    assert Autoscaler(cfg).observe(
+        snap([9], widths=[4], wmax=[4], free_vfs=1)) is None
+
+
+def test_shrink_reshape_on_measured_bubble():
+    """A gang whose measured schedule bubble crosses ``reshape_bubble``
+    is narrowed before any engine is parked; a busy low-bubble gang is
+    left alone."""
+    cfg = AutoscaleConfig(hysteresis=1, cooldown=0, min_engines=1)
+    act = Autoscaler(cfg).observe(
+        snap([2, 3], widths=[3, 1], wmax=[4, 1], bubbles=[0.7, 0.0]))
+    assert act is not None and act.kind == "reshape"
+    assert act.victim == "e0" and act.width == 2
+    assert justify_action(act, cfg) is None
+    assert Autoscaler(cfg).observe(
+        snap([2, 3], widths=[3, 1], wmax=[4, 1],
+             bubbles=[0.2, 0.0])) is None
+
+
+def test_justification_catches_unjustified_reshapes():
+    """I11 covers the width dimension: reshape actions the snapshot does
+    not support are named violations."""
+    cfg = AutoscaleConfig()
+    for bogus, needle in (
+            (AutoscaleAction("reshape", snap([9]), victim="e9", width=2),
+             "not running"),
+            (AutoscaleAction("reshape", snap([9], widths=[2], wmax=[4]),
+                             victim="e0", width=2), "to width 2 from 2"),
+            (AutoscaleAction("reshape", snap([9], widths=[2], wmax=[2]),
+                             victim="e0", width=3), "template ceiling"),
+            (AutoscaleAction("reshape", snap([1], widths=[2], wmax=[4]),
+                             victim="e0", width=3), "hot threshold"),
+            (AutoscaleAction("reshape",
+                             snap([9], widths=[2], wmax=[4], free_vfs=0),
+                             victim="e0", width=3), "free VF"),
+            (AutoscaleAction("reshape",
+                             snap([5], widths=[2], wmax=[4],
+                                  bubbles=[0.1]),
+                             victim="e0", width=1), "busy")):
         err = justify_action(bogus, cfg)
         assert err is not None and needle in err
         with pytest.raises(InvariantViolation, match="I11"):

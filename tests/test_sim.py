@@ -77,6 +77,78 @@ def test_randomized_scenarios_hold_invariants(policy):
 
 
 # ---------------------------------------------------------------------------
+# elastic pipeline gangs in the scenario plane (reshape op, I14)
+# ---------------------------------------------------------------------------
+def test_generator_reshape_rate_zero_is_byte_identical():
+    """reshape_rate=0 must not perturb a single rng draw: pre-gang
+    sequences stay byte-identical (the knob is truthiness-gated)."""
+    for seed in range(8):
+        a = generate_scenario(ScenarioConfig(seed=seed, serve_rate=0.3,
+                                             crash_rate=0.05))
+        b = generate_scenario(ScenarioConfig(seed=seed, serve_rate=0.3,
+                                             crash_rate=0.05,
+                                             reshape_rate=0.0))
+        assert a == b
+
+
+def test_generator_emits_reshape_ops_within_budget():
+    """With room for the gang (max_vfs=8) the generator attaches pg0 and
+    alternates its width 2<->3; every reshape op targets the lead and
+    the gang's VF take stays within the pool."""
+    saw_reshape = False
+    for seed in range(6):
+        ops = generate_scenario(ScenarioConfig(
+            seed=seed, num_ops=40, serve_rate=0.3, reshape_rate=0.3,
+            max_vfs=8))
+        gang = [o for o in ops if o.tenant == "pg0"]
+        assert gang and gang[0].kind == "attach"
+        widths = [o.num_vfs for o in ops if o.kind == "reshape"]
+        assert all(o.tenant == "pg0" for o in ops if o.kind == "reshape")
+        assert all(w in (2, 3) for w in widths)
+        for a, b in zip([2] + widths, widths):
+            assert a != b                 # always an actual width change
+        saw_reshape = saw_reshape or bool(widths)
+    assert saw_reshape
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_reshape_scenarios_hold_invariants(policy):
+    """Gang scenarios (reshape + serve traffic + crash ops interleaved)
+    hold every invariant including I14 after each op, and replay to
+    identical fingerprints.  Autoscale is off so the generator's
+    validity model is exact and every non-chaos op must succeed (an
+    autoscaler-attached engine would consume free VFs the model cannot
+    see — same caveat as the autoscale suite)."""
+    for seed in range(8):
+        cfg = ScenarioConfig(seed=seed, policy=policy, num_ops=45,
+                             serve_rate=0.3, reshape_rate=0.25,
+                             crash_rate=0.06, max_vfs=8)
+        res = ScenarioRunner(cfg).run()
+        for r in res.ops:
+            if r.status == "rejected":
+                assert r.op.chaos, (
+                    f"seed={seed}: valid op rejected: {r.op} -> "
+                    f"{r.error}")
+        assert res.fingerprint() == ScenarioRunner(cfg).run().fingerprint()
+
+
+def test_reshape_with_autoscale_interleaved():
+    """Reshape interleaved with the autoscale plane: scale_out may
+    legitimately consume the free VF a planned grow-reshape counted on,
+    so rejections are permitted here — but each must be ATOMIC (the
+    harness checks all invariants, I14 included, after every op either
+    way) and the whole history must replay to the same fingerprint.
+    Seeds are fixed (as in the autoscale suite) because the generator's
+    validity model is only approximate once the autoscaler acts."""
+    for seed in (1, 4, 5):
+        cfg = ScenarioConfig(seed=seed, num_ops=45, serve_rate=0.3,
+                             reshape_rate=0.25, autoscale_rate=0.1,
+                             crash_rate=0.06, max_vfs=8)
+        res = ScenarioRunner(cfg).run()
+        assert res.fingerprint() == ScenarioRunner(cfg).run().fingerprint()
+
+
+# ---------------------------------------------------------------------------
 # checker sensitivity: a vacuous checker would pass everything
 # ---------------------------------------------------------------------------
 def _small_system(tmp_path, policy="first_fit"):
@@ -103,6 +175,28 @@ def test_checker_detects_state_corruption(tmp_path):
     check_invariants(mgr)
     tn._state["params"]["w0"] = tn._state["params"]["w0"] + 1.0
     with pytest.raises(InvariantViolation, match="I4"):
+        check_invariants(mgr)
+
+
+def test_checker_detects_gang_width_drift(tmp_path):
+    """I14 sensitivity: a lead whose width disagrees with its running
+    shell count (half-applied reshape) must be caught."""
+    from repro.sim.tenant import SimPipelineTenant
+    pool = DevicePool(devices=tuple(f"d{i}" for i in range(8)))
+    mgr = SVFFManager(pool, workdir=str(tmp_path),
+                      staging=StagingEngine(num_queues=1))
+    lead = SimPipelineTenant("pg0", seed=0, width=2, max_width=3)
+    mgr.init(num_vfs=4, tenants=[])
+    mgr.attach_group(lead)
+    check_invariants(mgr)                          # sane baseline
+    lead._width = 3                                # width moved, no shell
+    with pytest.raises(InvariantViolation, match="I14"):
+        check_invariants(mgr)
+    lead._width = 2
+    check_invariants(mgr)
+    bad = lead.stage_bounds()[:-1] + (99,)         # broken partition
+    lead.stage_bounds = lambda: bad
+    with pytest.raises(InvariantViolation, match="I14"):
         check_invariants(mgr)
 
 
