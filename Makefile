@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast chaos chaos-fast bench bench-pause bench-sweep \
 	bench-chaos bench-serve bench-elastic bench-prefix bench-migration \
-	bench-roofline bench-pipeline
+	bench-roofline bench-pipeline bench-federation
 
 test:            ## full tier-1 suite
 	$(PYTHON) -m pytest -x -q
@@ -19,7 +19,7 @@ chaos-fast:      ## PR-gate crash matrix subset
 
 bench: bench-pause bench-sweep bench-chaos bench-serve bench-elastic \
 	bench-prefix bench-migration bench-roofline \
-	bench-pipeline  ## regenerate BENCH_*.json
+	bench-pipeline bench-federation  ## regenerate BENCH_*.json
 
 bench-pause:
 	$(PYTHON) benchmarks/pause_path.py --repeats 3 --out BENCH_pause_path.json
@@ -50,3 +50,6 @@ bench-roofline:  ## achieved-vs-peak bandwidth per decode kernel variant
 
 bench-pipeline:  ## K-VF pipeline engines (bit-identity, bubble, reshape)
 	$(PYTHON) benchmarks/pipeline_serve.py --out BENCH_pipeline_serve.json
+
+bench-federation: ## 8-host lease-routed fleet (exactly-once, bit-identity)
+	$(PYTHON) benchmarks/federation.py --out BENCH_federation.json

@@ -2,22 +2,39 @@
 
 DevicePool (PF) -> VirtualFunction slices -> Tenants (VMs), with the novel
 pause/unpause mechanism, init/reconf automation, QMP-style control plane,
-and fault-tolerance built on the same snapshot machinery.
+fault-tolerance built on the same snapshot machinery, and (PR 10) the
+federated multi-host control plane (``Host`` / ``FederationCoordinator``).
+
+This package is also the canonical home of the typed error hierarchy:
+every error a caller may want to catch — manager, scheduler, paged-KV and
+federation alike — is importable from ``repro.core`` directly (the classes
+live in leaf module ``repro.core.errors`` plus ``repro.core.scheduler``;
+historic homes such as ``repro.core.manager.ManagerError`` and
+``repro.serve.paged.DoubleFreeError`` remain as re-exports).
 """
 from repro.core.autoscaler import (Autoscaler, AutoscaleAction,
                                    AutoscaleConfig, EngineStats,
                                    TelemetrySnapshot, justify_action)
+from repro.core.errors import (DoubleFreeError, FederationError,
+                               HostUnreachableError, LeaseExpiredError,
+                               ManagerError, SplitBrainError,
+                               UnknownRequestError, UnknownTenantError)
 from repro.core.fault import (CrashPlane, HeartbeatMonitor, InjectedCrash,
                               Supervisor, crash_plane, crashpoint)
+from repro.core.federation import (Fabric, FederationCoordinator, Lease,
+                                   RemoteTenant)
+from repro.core.host import Host, HostTelemetry
 from repro.core.journal import OpJournal
-from repro.core.manager import ManagerError, SVFFManager, UnknownTenantError
+from repro.core.manager import SVFFManager
 from repro.core.pause import (PauseError, PhaseTimings, pause_vf,
                               pause_vf_live, unpause_vf)
 from repro.core.pool import DevicePool, PoolError
 from repro.core.qmp import ControlPlane
 from repro.core.records import RecordStore
-from repro.core.scheduler import (AdmissionError, PlacementRequest,
-                                  Scheduler, make_scheduler, POLICY_NAMES)
+from repro.core.scheduler import (AdmissionError, GangPlacementError,
+                                  HostCandidate, PlacementRequest,
+                                  Scheduler, choose_host, make_scheduler,
+                                  POLICY_NAMES)
 from repro.core.snapshot import ConfigSpaceSnapshot
 from repro.core.staging import StagingEngine, TransferStats
 from repro.core.tenant import DevicePausedError, Tenant
@@ -25,13 +42,18 @@ from repro.core.vf import VFState, VFTransitionError, VirtualFunction
 
 __all__ = [
     "AdmissionError", "Autoscaler", "AutoscaleAction", "AutoscaleConfig",
-    "ConfigSpaceSnapshot", "ControlPlane", "CrashPlane", "EngineStats",
+    "ConfigSpaceSnapshot", "ControlPlane", "CrashPlane", "DoubleFreeError",
+    "EngineStats", "Fabric", "FederationCoordinator", "FederationError",
+    "GangPlacementError", "Host", "HostCandidate", "HostTelemetry",
+    "HostUnreachableError", "Lease", "LeaseExpiredError",
     "TelemetrySnapshot", "justify_action",
     "DevicePausedError", "DevicePool", "HeartbeatMonitor", "InjectedCrash",
     "ManagerError", "OpJournal", "PauseError", "PhaseTimings",
     "PlacementRequest", "PoolError", "POLICY_NAMES", "RecordStore",
-    "SVFFManager", "Scheduler", "StagingEngine", "Supervisor", "Tenant",
-    "TransferStats", "UnknownTenantError", "VFState", "VFTransitionError",
-    "VirtualFunction", "crash_plane", "crashpoint", "make_scheduler",
-    "pause_vf", "pause_vf_live", "unpause_vf",
+    "RemoteTenant", "SVFFManager", "Scheduler", "SplitBrainError",
+    "StagingEngine", "Supervisor", "Tenant",
+    "TransferStats", "UnknownRequestError", "UnknownTenantError",
+    "VFState", "VFTransitionError",
+    "VirtualFunction", "choose_host", "crash_plane", "crashpoint",
+    "make_scheduler", "pause_vf", "pause_vf_live", "unpause_vf",
 ]

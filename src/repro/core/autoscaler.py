@@ -97,6 +97,10 @@ class TelemetrySnapshot:
     free_vfs: int = 0           # detached, unowned, device-holding VFs
     grow_budget: int = 0        # extra VFs a reconf could still create
     rejected_recent: int = 0    # fleet-wide rejections since last snapshot
+    age_s: float = 0.0          # age of the OLDEST evidence in this view
+                                # (0 for a locally-built snapshot; the
+                                # federation stamps replicated snapshots
+                                # and a partition makes them grow old)
 
     def running(self) -> tuple:
         return tuple(e for e in self.engines if e.status == "running")
@@ -137,6 +141,11 @@ class AutoscaleConfig:
                                     # (e.g. the fleet's ingress engine)
     reshape_bubble: float = 0.5     # shrink a gang when its MEASURED
                                     # schedule bubble reaches this share
+    max_staleness_s: float = math.inf   # refuse to act on a snapshot whose
+                                        # evidence is older than this (the
+                                        # federation sets it so a partition
+                                        # cannot drive scaling from a stale
+                                        # replicated view — I11's age arm)
 
 
 ACTION_KINDS = ("scale_out", "scale_in", "rebalance", "reshape")
@@ -151,6 +160,9 @@ def justify_action(action: AutoscaleAction,
     only ever legal if its instantaneous preconditions held in the
     snapshot it read."""
     snap = action.snapshot
+    if snap.age_s > cfg.max_staleness_s:
+        return (f"action planned from stale telemetry: age "
+                f"{snap.age_s:.3f}s > bound {cfg.max_staleness_s:.3f}s")
     running = snap.running()
     by_tid = {e.tid: e for e in running}
     if action.kind == "scale_out":
@@ -237,6 +249,11 @@ class Autoscaler:
     def observe(self, snap: TelemetrySnapshot
                 ) -> Optional[AutoscaleAction]:
         cfg = self.cfg
+        if snap.age_s > cfg.max_staleness_s:
+            # stale evidence plans nothing AND advances nothing: streaks
+            # and cooldown freeze, so one fresh post-heal snapshot cannot
+            # combine with pre-partition streak state to trigger an action
+            return None
         running = snap.running()
         thr = snap.hot_threshold(cfg)
         hot = [e for e in running if e.load >= thr]

@@ -1,0 +1,76 @@
+"""Canonical typed-error hierarchy for the SVFF stack.
+
+Deliberately a LEAF module (imports nothing from the package) so every
+layer — core, serve, sim, the federation — can raise and catch the same
+classes without import cycles. ``repro.core.__init__`` re-exports the
+whole hierarchy; the defining modules (``core.manager``,
+``serve.paged``) import from here and re-export for backward
+compatibility, so ``from repro.core.manager import ManagerError`` keeps
+working and names stay identity-equal everywhere.
+
+Hierarchy (pool/scheduler admission errors live in their own modules
+because they subclass ``PoolError``):
+
+    RuntimeError
+    ├── ManagerError
+    │   ├── UnknownTenantError
+    │   └── FederationError
+    │       ├── HostUnreachableError
+    │       ├── LeaseExpiredError
+    │       └── SplitBrainError
+    ├── DoubleFreeError
+    └── UnknownRequestError
+"""
+from __future__ import annotations
+
+
+class ManagerError(RuntimeError):
+    """Typed manager-level rejection (the base the sim harness accepts)."""
+
+
+class UnknownTenantError(ManagerError):
+    """Operation names a tenant the manager holds no state for (e.g.
+    unpause of a tenant with no RAM snapshot). Typed so the sim harness
+    never has to treat a blanket ``KeyError`` as an expected rejection."""
+
+
+class DoubleFreeError(RuntimeError):
+    """``free`` of a rid that holds no pages. With refcounted sharing a
+    silent double-decref would corrupt pages still referenced by sibling
+    requests, so this is a loud typed error, never a no-op."""
+
+
+class UnknownRequestError(RuntimeError):
+    """``extend``/``cow`` of a rid that holds no pages. The engine's lazy
+    decode growth and CoW splits only ever name requests it placed, so an
+    unknown rid here is a control-plane bug (stale slot map, migration
+    race) — a loud typed error, never a silent KeyError/ValueError that
+    callers can't distinguish from a malformed argument."""
+
+
+# --------------------------------------------------------------- federation
+class FederationError(ManagerError):
+    """Base for cross-host control-plane rejections. A subclass of
+    ``ManagerError`` so the sim harness's rejection set absorbs
+    federation-plane failures the same way it absorbs single-host ones —
+    a partition is an expected rejection, never a crash."""
+
+
+class HostUnreachableError(FederationError):
+    """A cross-host call could not traverse the fabric (network
+    partition). Side-effect-free by construction: every federation path
+    checks reachability BEFORE its destructive step, and a partition that
+    strikes mid-migration defers the journal entry instead of guessing."""
+
+
+class LeaseExpiredError(FederationError):
+    """An operation was attempted against (or by) a host whose liveness
+    lease has lapsed. The coordinator routes around expired hosts; a
+    host acting on a lapsed lease must re-heartbeat first."""
+
+
+class SplitBrainError(FederationError):
+    """A stale coordinator (lease epoch below the host's fence) tried to
+    admit or reconfigure. Lease epochs are fencing tokens: once a host
+    has seen epoch N it rejects every op carrying an older epoch, so two
+    coordinators can never both drive the same host (invariant I15)."""

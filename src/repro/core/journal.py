@@ -71,8 +71,22 @@ def _fsync_dir(path: str) -> None:
 
 
 class OpJournal:
-    def __init__(self, directory: str):
+    def __init__(self, directory: str, *,
+                 compact_every: Optional[int] = None,
+                 compact_keep: int = 32):
+        """``compact_every``: auto-compaction threshold — whenever the
+        number of RESOLVED entries on disk reaches it, ``compact`` runs
+        with ``keep=compact_keep`` (newest resolved entries retained, so
+        the I8 replay still sees every tenant's latest committed op).
+        ``None`` (the default) keeps the pre-federation behaviour:
+        compaction is an explicit operator action only. Long federation
+        runs pass ``compact_every`` so the WAL stays bounded."""
         self.dir = directory
+        if compact_every is not None and compact_every < 1:
+            raise ValueError(f"compact_every must be >= 1, "
+                             f"got {compact_every}")
+        self.compact_every = compact_every
+        self.compact_keep = compact_keep
         os.makedirs(directory, exist_ok=True)
         self._seq = self._max_seq()
         # entry cache: the invariant checker replays the journal after
@@ -140,6 +154,27 @@ class OpJournal:
         entry["status"] = status
         entry["details"].update(extra)
         self._write(entry)
+        if self.compact_every is not None:
+            resolved = sum(1 for e in self._load().values()
+                           if e["status"] != PENDING)
+            if resolved >= self.compact_every:
+                self.compact(keep=self.compact_keep)
+
+    def defer(self, seq: int, **extra) -> None:
+        """Mark a PENDING entry as deferred (details updated, status kept
+        pending): recovery could not resolve it — typically a cross-host
+        migrate whose destination host is unreachable — and will retry on
+        the next ``recover``. Idempotent: re-deferring with the same
+        details never rewrites the file, so a double recovery stays a
+        bit-identical no-op (I16)."""
+        entry = self.read(seq)
+        if entry["status"] != PENDING:
+            raise JournalError(
+                f"entry {seq} already {entry['status']}, cannot defer")
+        if all(entry["details"].get(k) == v for k, v in extra.items()):
+            return
+        entry["details"].update(extra)
+        self._write(entry)
 
     def commit(self, seq: int, **extra) -> None:
         self._resolve(seq, COMMITTED, **extra)
@@ -183,10 +218,13 @@ class OpJournal:
         """Drop resolved entries (all but the newest ``keep``); pending
         entries are never dropped. Returns how many were removed.
 
-        NOT called automatically: invariant I8 replays the committed
-        history to predict live tenant statuses, so compaction is an
-        explicit operator/offline action (a manager that compacts must
-        accept a weaker I8 over the dropped prefix)."""
+        Triggered automatically only when ``compact_every`` was set (the
+        federation's bounded-WAL mode); otherwise an explicit operator/
+        offline action. Compaction drops an OLDEST-first prefix of the
+        resolved entries, so whenever any entry of a tenant survives its
+        NEWEST committed one survives — the I8 replay (which keys each
+        tenant on its latest committed op) stays sound, merely vacuous
+        for tenants whose entire history was dropped."""
         resolved = [e for e in self.entries() if e["status"] != PENDING]
         drop = resolved[:-keep] if keep else resolved
         for e in drop:

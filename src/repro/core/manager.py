@@ -27,6 +27,8 @@ from typing import Optional, Sequence
 import jax
 
 from repro.configs.base import RunConfig
+from repro.core.errors import (HostUnreachableError, ManagerError,
+                               UnknownTenantError)
 from repro.core.fault import InjectedCrash, crashpoint
 from repro.core.journal import OpJournal, PENDING
 from repro.core.pool import DevicePool, PoolError
@@ -42,14 +44,10 @@ from repro.core.vf import VFState, VirtualFunction
 from repro.checkpoint.store import CheckpointStore
 
 
-class ManagerError(RuntimeError):
-    """Typed manager-level rejection (the base the sim harness accepts)."""
-
-
-class UnknownTenantError(ManagerError):
-    """Operation names a tenant the manager holds no state for (e.g.
-    unpause of a tenant with no RAM snapshot). Typed so the sim harness
-    never has to treat a blanket ``KeyError`` as an expected rejection."""
+# ManagerError / UnknownTenantError now live in the canonical hierarchy
+# (repro.core.errors); imported above and re-exported here so existing
+# ``from repro.core.manager import ManagerError`` call sites keep working.
+__all__ = ["ManagerError", "SVFFManager", "UnknownTenantError"]
 
 
 class SVFFManager:
@@ -59,7 +57,13 @@ class SVFFManager:
                  pause_enabled: bool = True,
                  scheduler: "Scheduler | str | None" = None,
                  records: Optional[RecordStore] = None,
-                 journal: Optional[OpJournal] = None):
+                 journal: Optional[OpJournal] = None,
+                 peer_lookup=None):
+        #: federation hook — ``peer_lookup(host_id, tid) -> tenant|None``
+        #: resolves a tenant living on ANOTHER host (raising
+        #: ``HostUnreachableError`` when the fabric is partitioned).
+        #: ``None`` keeps the single-host behaviour everywhere.
+        self.peer_lookup = peer_lookup
         self.pool = pool
         self.staging = staging or StagingEngine()
         self.pause_enabled = pause_enabled
@@ -414,7 +418,8 @@ class SVFFManager:
                 "new_devices": [str(d) for d in vf.devices]}
 
     def migrate_request(self, src: Tenant, dst: Tenant,
-                        rid: Optional[int] = None) -> dict:
+                        rid: Optional[int] = None, *,
+                        dst_host: Optional[str] = None) -> dict:
         """Request-granular live migration: ship ONE in-flight request's
         KV block chain from ``src`` to ``dst`` through the staging
         descriptor pipeline and resume it there token-identically (I10).
@@ -451,8 +456,16 @@ class SVFFManager:
             raise ManagerError(
                 f"migrate_request: {src.tid} has no migratable in-flight "
                 "request")
+        # ``dst_host`` marks a CROSS-HOST migration (federation plane):
+        # the destination tenant lives under another host's manager, so
+        # recovery resolves the entry through ``peer_lookup`` — and
+        # DEFERS it (entry stays pending) when that host is unreachable,
+        # because resolving blind risks serving the request twice (I15).
+        details = {"dst": dst.tid, "rid": rid}
+        if dst_host is not None:
+            details["dst_host"] = dst_host
         entry = self.journal.begin("migrate_request", src.tid,
-                                   vf_id=src.vf_id, dst=dst.tid, rid=rid)
+                                   vf_id=src.vf_id, **details)
         mig_key = f"{src.tid}/mig:{rid}"
         try:
             payload = src.extract_request(rid)
@@ -680,8 +693,8 @@ class SVFFManager:
                 snapshots: Optional[dict] = None,
                 workdir: Optional[str] = None,
                 pause_enabled: bool = True,
-                scheduler: "Scheduler | str | None" = None
-                ) -> "SVFFManager":
+                scheduler: "Scheduler | str | None" = None,
+                peer_lookup=None) -> "SVFFManager":
         """Rebuild a manager after the previous one died mid-operation.
 
         What survives a manager crash — and is therefore handed in — is
@@ -710,7 +723,8 @@ class SVFFManager:
         staging = staging or StagingEngine()
         mgr = cls(pool, staging=staging, workdir=workdir,
                   pause_enabled=pause_enabled, scheduler=scheduler,
-                  records=records, journal=journal)
+                  records=records, journal=journal,
+                  peer_lookup=peer_lookup)
 
         # -- 1. sweep crash debris; a fresh process holds no device memos
         staging.clear()
@@ -856,8 +870,22 @@ class SVFFManager:
             # its copy); otherwise roll BACK (target drops any partial
             # admission, source thaws the frozen slot and keeps serving).
             # Every callee is idempotent, so double recovery (I9) holds.
+            # Cross-host entries (details carry ``dst_host``) resolve the
+            # target through ``peer_lookup``; when the destination host
+            # is unreachable the entry is DEFERRED — left pending with
+            # the frozen source slot intact — because the target may have
+            # admitted, and rolling back blind would serve the request on
+            # two hosts (I15). The next ``recover`` after the partition
+            # heals resolves it exactly once (I16).
             rid = e["details"].get("rid")
+            dst_host = e["details"].get("dst_host")
             dtn = self.tenants.get(e["details"].get("dst"))
+            if dtn is None and dst_host and self.peer_lookup is not None:
+                try:
+                    dtn = self.peer_lookup(dst_host, e["details"]["dst"])
+                except HostUnreachableError:
+                    self.journal.defer(seq, deferred_cross_host=True)
+                    return
             self.staging.clear(f"{tid}/mig:{rid}")
             dst_owns = (dtn is not None and hasattr(dtn, "owns_request")
                         and dtn.owns_request(rid))

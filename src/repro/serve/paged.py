@@ -61,18 +61,11 @@ class CacheExhausted(RuntimeError):
     Admission backs off (the request stays queued) rather than failing."""
 
 
-class DoubleFreeError(RuntimeError):
-    """``free`` of a rid that holds no pages. With refcounted sharing a
-    silent double-decref would corrupt pages still referenced by sibling
-    requests, so this is a loud typed error, never a no-op."""
-
-
-class UnknownRequestError(RuntimeError):
-    """``extend``/``cow`` of a rid that holds no pages. The engine's lazy
-    decode growth and CoW splits only ever name requests it placed, so an
-    unknown rid here is a control-plane bug (stale slot map, migration
-    race) — a loud typed error, never a silent KeyError/ValueError that
-    callers can't distinguish from a malformed argument."""
+# DoubleFreeError / UnknownRequestError now live in the canonical typed
+# error hierarchy (repro.core.errors) so callers can catch them via
+# ``from repro.core import ...``; re-exported here because this was their
+# historic home (PRs 4-8 call sites / docs name repro.serve.paged).
+from repro.core.errors import DoubleFreeError, UnknownRequestError  # noqa: E402,F401
 
 
 def _is_kv(path) -> bool:

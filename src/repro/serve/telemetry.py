@@ -148,6 +148,17 @@ class MetricsBus:
     def load_p95(self, tid: str) -> float:
         return percentile([s[0] for s in self._load[tid]], 0.95)
 
+    def replicate(self, now: float) -> dict:
+        """Stamped copy of the aggregated view for cross-host replication:
+        the federation coordinator keeps the newest replica it could pull
+        per host, and judges freshness by ``stamp`` age on ITS clock (so
+        host and coordinator clocks never need to agree). Everything in
+        the replica is already aggregated — replication cost is O(engines),
+        never O(requests)."""
+        return {"stamp": float(now),
+                "rejected_recent": self._rejected_since_snapshot,
+                "engines": self.describe()}
+
     def describe(self) -> dict:
         return {tid: {"submitted": self.submitted[tid],
                       "completed": self.completed[tid],

@@ -16,8 +16,9 @@ Pieces
   tenant      ``SimTenant`` — numpy-state tenant whose state is a pure
               function of ``(seed, steps_done)``
   invariants  ``check_invariants`` (I1-I5, I8) + ``check_timings`` (I6)
-              + ``check_pause_timings`` (I7), asserted after every op —
-              see its docstring for the list
+              + ``check_pause_timings`` (I7) + ``check_federation``
+              (I15), asserted after every op — see its docstring for
+              the list
   chaos       crash-point catalogue (``CRASH_POINTS``), per-cell runner
               (``run_crash_case``) and the full ``crash_matrix``; I9
               (recovery idempotence) lives in ``recover_manager``
@@ -26,6 +27,13 @@ Pieces
               Table-II timing dict of every reconf; ``crash`` ops kill
               the manager at a crash point and rebuild it via
               ``SVFFManager.recover``
+  federation  the multi-host plane: ``FedScenarioConfig`` /
+              ``run_fed_scenario`` over a lease-based
+              ``FederationCoordinator``, the network-fault catalogue
+              (``NETWORK_FAULTS``: armed one-shot partitions instead of
+              crash points) with ``run_network_fault_case`` /
+              ``network_fault_matrix``, and ``federation_fingerprint``
+              (the I16 recovery-idempotence digest)
 
 Reproducing a failure
 ---------------------
@@ -43,21 +51,32 @@ from repro.sim.chaos import (CRASH_POINTS, CrashSpec, crash_matrix,
                              recover_manager, run_crash_case,
                              state_fingerprint)
 from repro.sim.clock import VirtualClock
+from repro.sim.federation import (FED_OP_KINDS, FedOp, FedRunner,
+                                  FedScenarioConfig, NETWORK_FAULTS,
+                                  NetFaultSpec, build_fed_cell,
+                                  federation_fingerprint,
+                                  generate_fed_scenario,
+                                  network_fault_matrix, run_fed_scenario,
+                                  run_network_fault_case)
 from repro.sim.harness import (OpResult, ScenarioResult, ScenarioRunner,
                                run_scenario)
 from repro.sim.invariants import (InvariantViolation, check_autoscale,
-                                  check_invariants, check_pause_timings,
-                                  check_timings)
+                                  check_federation, check_invariants,
+                                  check_pause_timings, check_timings)
 from repro.sim.scenario import (ARRIVAL_PATTERNS, Op, OP_KINDS,
                                 ScenarioConfig, generate_scenario)
 from repro.sim.tenant import ServeSimTenant, SimServeTenant, SimTenant
 
 __all__ = [
-    "ARRIVAL_PATTERNS", "CRASH_POINTS", "CrashSpec", "InvariantViolation",
-    "Op", "OP_KINDS", "OpResult", "ScenarioConfig", "ScenarioResult",
-    "ScenarioRunner", "ServeSimTenant", "SimServeTenant", "SimTenant",
-    "VirtualClock", "check_autoscale", "check_invariants",
-    "check_pause_timings", "check_timings", "crash_matrix",
-    "generate_scenario", "recover_manager", "run_crash_case",
+    "ARRIVAL_PATTERNS", "CRASH_POINTS", "CrashSpec", "FED_OP_KINDS",
+    "FedOp", "FedRunner", "FedScenarioConfig", "InvariantViolation",
+    "NETWORK_FAULTS", "NetFaultSpec", "Op", "OP_KINDS", "OpResult",
+    "ScenarioConfig", "ScenarioResult", "ScenarioRunner",
+    "ServeSimTenant", "SimServeTenant", "SimTenant", "VirtualClock",
+    "build_fed_cell", "check_autoscale", "check_federation",
+    "check_invariants", "check_pause_timings", "check_timings",
+    "crash_matrix", "federation_fingerprint", "generate_fed_scenario",
+    "generate_scenario", "network_fault_matrix", "recover_manager",
+    "run_crash_case", "run_fed_scenario", "run_network_fault_case",
     "run_scenario", "state_fingerprint",
 ]

@@ -25,8 +25,8 @@ from typing import Optional
 
 from repro.core.autoscaler import (Autoscaler, AutoscaleConfig,
                                    EngineStats, TelemetrySnapshot)
+from repro.core import ManagerError, SVFFManager
 from repro.core.fault import Supervisor
-from repro.core.manager import ManagerError, SVFFManager
 from repro.core.pool import DevicePool, PoolError
 from repro.core.pause import PauseError
 from repro.core.records import RecordError

@@ -3,7 +3,11 @@
 A *scenario* is a deterministic sequence of ``Op``s derived entirely from
 ``ScenarioConfig.seed`` — ``generate_scenario(cfg)`` called twice returns
 identical tuples, so any failing run is reproducible from its seed alone
-(see ``repro.sim`` package docstring).
+(see ``repro.sim`` package docstring). This module is SINGLE-host: one
+manager, one op stream. The multi-host plane — coordinator routing,
+partitions, lease handoffs — has its own op DSL and generator in
+``repro.sim.federation`` (same conventions: frozen op dataclass, every
+fault-rate knob defaults to 0, same-seed-same-stream).
 
 Op kinds (the paper's management surface + fault injection):
 

@@ -245,7 +245,7 @@ def test_fleet_scale_in_refuses_inflight_prefill_then_parks(setup):
     """Satellite edge case: scale-in must refuse while the victim holds
     in-flight chunked-prefill jobs (they would strand), and succeed once
     drained — parking the engine's state on disk with its VF detached."""
-    from repro.core.manager import ManagerError
+    from repro.core import ManagerError
     from repro.serve import Request, ServeFleet
     run, model, params = setup
     fleet = ServeFleet(run, params, num_engines=1, num_devices=2, slots=2,

@@ -20,7 +20,7 @@ from repro.configs import make_run_config
 from repro.core.autoscaler import (AutoscaleAction, AutoscaleConfig,
                                    EngineStats, TelemetrySnapshot,
                                    justify_action)
-from repro.core.manager import ManagerError, SVFFManager
+from repro.core import ManagerError, SVFFManager
 from repro.core.pool import DevicePool
 from repro.core.staging import StagingEngine
 from repro.models.model import build_model

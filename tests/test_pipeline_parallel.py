@@ -199,9 +199,8 @@ def test_gang_admission_error_is_atomic(tmp_path):
     """A gang that cannot be placed whole is refused TYPED and
     side-effect-free: no member attached, no VF claimed, no pending
     journal entry — then the same gang attaches fine once room exists."""
-    from repro.core.manager import SVFFManager
+    from repro.core import GangPlacementError, SVFFManager
     from repro.core.pool import DevicePool
-    from repro.core.scheduler import GangPlacementError
     from repro.core.staging import StagingEngine
     from repro.sim.invariants import check_invariants
     from repro.sim.tenant import SimPipelineTenant, SimTenant
@@ -303,7 +302,7 @@ def test_fleet_scale_out_gang_budget(qsetup):
     whole gang needs. 3 devices with one K=2 gang live -> a second gang
     (4 VFs) is refused typed, nothing half-carved; with 4 devices the
     same scale-out reconfs to 4 VFs and gang-attaches whole."""
-    from repro.core.manager import ManagerError
+    from repro.core import ManagerError
     from repro.serve.fleet import ServeFleet
     run, params = qsetup
     with tempfile.TemporaryDirectory() as wd:
